@@ -1,0 +1,58 @@
+//! CIFAR-style workload: the paper's §5.1 setting in miniature.
+//!
+//! Trains the MiniResNet ("cnn" artifact) on synthimg under four
+//! regimes — exact FP32, QAT, 8-bit PTQ FQT, 5-bit BHQ FQT — and prints
+//! a side-by-side comparison, the core qualitative claim of the paper:
+//! 5-bit BHQ tracks QAT while low-bit PTQ degrades.
+//!
+//! Run: `cargo run --release --example train_cifar [-- steps]`
+
+use anyhow::Result;
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::Trainer;
+use statquant::metrics::MarkdownTable;
+use statquant::runtime::{Registry, Runtime};
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("steps must be an integer"))
+        .unwrap_or(200);
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open("artifacts")?;
+
+    let regimes: [(&str, &str, f32); 4] = [
+        ("exact FP32", "exact", 8.0),
+        ("QAT (8-bit fwd)", "qat", 8.0),
+        ("FQT PTQ @ 5-bit", "ptq", 5.0),
+        ("FQT BHQ @ 5-bit", "bhq", 5.0),
+    ];
+
+    let mut table = MarkdownTable::new(&["regime", "eval acc (%)", "train loss", "steps/s"]);
+    for (label, variant, bits) in regimes {
+        let mut cfg = TrainConfig::default();
+        cfg.model = "cnn".into();
+        cfg.variant = variant.into();
+        cfg.bits = bits;
+        cfg.steps = steps;
+        cfg.lr = 0.1;
+        cfg.eval_every = (steps / 4).max(1);
+        cfg.out_dir = "results/train_cifar".into();
+        println!("[{label}] training {} steps...", cfg.steps);
+        let report = Trainer::new(&rt, &reg, cfg)?.train()?;
+        println!(
+            "[{label}] eval acc {:.2}%, train loss {:.4}",
+            100.0 * report.final_eval_acc,
+            report.final_train_loss
+        );
+        table.row(vec![
+            label.into(),
+            format!("{:.2}", 100.0 * report.final_eval_acc),
+            format!("{:.4}", report.final_train_loss),
+            format!("{:.2}", report.steps_per_second),
+        ]);
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Variance probe walkthrough: measure, per quantizer and bitwidth, the
+//! gradient variance that Theorem 2 bounds — the quantity that drives
+//! every accuracy result in the paper.
+//!
+//! Demonstrates the probe ABI directly (load the probe artifact, feed a
+//! fixed batch, Welford over SR seeds) and prints the variance matrix
+//! plus the "BHQ ~ PTQ - 3 bits" equivalence the paper reports.
+//!
+//! Run: `cargo run --release --example variance_probe [-- model]`
+
+use anyhow::Result;
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::make_dataset;
+use statquant::experiments::common::warm_params;
+use statquant::metrics::{fmt_sig, MarkdownTable};
+use statquant::runtime::{Executor, Registry, Runtime, StepKind};
+use statquant::stats::GradVarianceProbe;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "mlp".into());
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open("artifacts")?;
+
+    let mut cfg = TrainConfig::default();
+    cfg.model = model.clone();
+    cfg.out_dir = "results/variance_probe".into();
+    // a short warmup makes gradients realistically sparse (high train acc)
+    let params = warm_params(&rt, &reg, &cfg, 80)?;
+
+    let meta = reg.meta(&model, "qat", StepKind::Probe)?;
+    let dataset = make_dataset(
+        &cfg,
+        &meta.input_shape,
+        if model == "transformer" { "markov" } else { "synthimg" },
+    );
+    let batch = dataset.batch(2_000_000);
+
+    let bits = [3.0f32, 4.0, 5.0, 6.0, 7.0, 8.0];
+    let mut table = MarkdownTable::new(&["bits", "PTQ", "PSQ", "BHQ"]);
+    let mut curves: Vec<(String, Vec<f64>)> = Vec::new();
+    for q in ["ptq", "psq", "bhq"] {
+        let exec = rt.executor(reg.meta(&model, q, StepKind::Probe)?)?;
+        let probe = GradVarianceProbe::new(&exec);
+        let mut vs = Vec::new();
+        for &b in &bits {
+            let rep = probe.quantization_variance(&params, &batch.x, &batch.y, b, 10, 3)?;
+            vs.push(rep.quant_variance);
+        }
+        curves.push((q.to_string(), vs));
+    }
+    for (i, &b) in bits.iter().enumerate() {
+        table.row(vec![
+            format!("{b}"),
+            fmt_sig(curves[0].1[i], 3),
+            fmt_sig(curves[1].1[i], 3),
+            fmt_sig(curves[2].1[i], 3),
+        ]);
+    }
+    println!("\nquantization variance Var[grad | batch]:\n{}", table.render());
+
+    // the paper's equivalence: how many bits does BHQ save vs PTQ?
+    // find, for each bits b, the PTQ bitwidth with matching variance.
+    let ptq = &curves[0].1;
+    let bhq = &curves[2].1;
+    let mut saved = Vec::new();
+    for (i, &b) in bits.iter().enumerate() {
+        // interpolate log-variance of PTQ at bhq[i]
+        let target = bhq[i].max(1e-300).log2();
+        let mut equiv = None;
+        for j in 0..bits.len() - 1 {
+            let (y0, y1) = (ptq[j].max(1e-300).log2(), ptq[j + 1].max(1e-300).log2());
+            if (y1 - target) * (y0 - target) <= 0.0 {
+                let t = (target - y0) / (y1 - y0);
+                equiv = Some(f64::from(bits[j]) + t * f64::from(bits[j + 1] - bits[j]));
+                break;
+            }
+        }
+        if let Some(e) = equiv {
+            saved.push(e - f64::from(b));
+            println!("BHQ@{b} bits ~ PTQ@{e:.2} bits (saves {:.2} bits)", e - f64::from(b));
+        }
+    }
+    if !saved.is_empty() {
+        let avg = saved.iter().sum::<f64>() / saved.len() as f64;
+        println!("\naverage bits saved by BHQ over PTQ: {avg:.2} (paper: ~3)");
+    }
+    Ok(())
+}

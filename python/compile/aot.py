@@ -1,0 +1,132 @@
+# AOT pipeline: lower every (model, variant, step) to HLO *text* +
+# a JSON metadata sidecar + the initial parameter vector.
+#
+# HLO text (NOT lowered.compile() / .serialize()): jax >= 0.5 emits
+# HloModuleProtos with 64-bit instruction ids which the xla crate's
+# xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text
+# parser reassigns ids, so text round-trips cleanly (see
+# /opt/xla-example/README.md).
+#
+# Outputs under artifacts/:
+#   <model>_<variant>_<step>.hlo.txt   HLO text, loadable by rust runtime/
+#   <model>_<variant>_<step>.json      ABI metadata (shapes, dtypes)
+#   <model>_init.bin                   f32-LE initial flat parameters
+#   manifest.json                      index of everything built
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quantizers as Q
+
+# Which artifacts exist: gradient-quantizer variants get train+probe;
+# exact/qat get train+probe (QAT probe = the Var[QAT grad] baseline of
+# Fig 3); eval/actgrad are variant-independent (eval uses the qat forward
+# = the quantized model Eq. 3; actgrad uses the qat backward).
+GRAD_VARIANTS = ("ptq", "psq", "bhq")
+EXT_VARIANTS = ("fp8", "bfp")  # Table-2 formats: built for cnn only
+
+
+def artifact_plan(model_name):
+    plan = []
+    variants = ("exact", "qat") + GRAD_VARIANTS
+    if model_name == "cnn":
+        variants = variants + EXT_VARIANTS
+    for v in variants:
+        plan.append((v, "train"))
+        plan.append((v, "probe"))
+    plan.append(("qat", "eval"))
+    plan.append(("qat", "actgrad"))
+    return plan
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_meta(s):
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype).name)}
+
+
+def build_artifact(bm, kind, out_dir):
+    name = f"{bm.name}_{bm.qcfg.kind}_{kind}"
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    meta_path = os.path.join(out_dir, f"{name}.json")
+    t0 = time.time()
+    lowered, args = M.lower_step(bm, kind)
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta = {
+        "model": bm.name,
+        "variant": bm.qcfg.kind,
+        "step": kind,
+        "n_params": bm.n_params,
+        "batch": bm.cfg.input_shape[0],
+        "input_shape": list(bm.cfg.input_shape),
+        "input_dtype": bm.cfg.input_dtype,
+        "inputs": [_spec_meta(a) for a in args],
+        "outputs": [_spec_meta(o) for o in jax.tree.leaves(lowered.out_info)],
+        "probe_shape": list(bm.mod.probe_shape(bm.cfg)),
+        "momentum": M.MOMENTUM,
+        "hlo_bytes": len(text),
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    return name, meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument(
+        "--models",
+        default="mlp,cnn,resnet,transformer",
+        help="comma-separated subset of models to build",
+    )
+    ap.add_argument("--seed", type=int, default=0, help="init seed")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}, "artifacts": []}
+    for model_name in args.models.split(","):
+        model_name = model_name.strip()
+        if model_name not in M.MODELS:
+            sys.exit(f"unknown model {model_name!r}")
+        built_any = None
+        for variant, kind in artifact_plan(model_name):
+            bm = M.build(model_name, variant, seed=args.seed)
+            built_any = bm
+            name, meta = build_artifact(bm, kind, args.out)
+            manifest["artifacts"].append(name)
+            print(
+                f"[aot] {name}: P={meta['n_params']} "
+                f"hlo={meta['hlo_bytes']//1024}KiB "
+                f"({meta['lower_seconds']}s)",
+                flush=True,
+            )
+        init_path = os.path.join(args.out, f"{model_name}_init.bin")
+        built_any.params0_flat.astype("<f4").tofile(init_path)
+        manifest["models"][model_name] = {
+            "n_params": built_any.n_params,
+            "init": os.path.basename(init_path),
+        }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1: Pallas kernels (interpret=True) + pure-jnp reference oracles.
+from . import ref  # noqa: F401
+from .qmatmul import qmatmul, qmatmul_nt, qmatmul_tn  # noqa: F401
+from .sr_quant import rn_quant, sr_quant  # noqa: F401

@@ -1,0 +1,52 @@
+# Kernel scheduling profiles.
+#
+# The BlockSpec tile sizes mean different things on the two execution
+# paths:
+#
+#   * "tpu"  — the real-hardware schedule: 128-multiple tiles sized to the
+#     MXU (128x128 systolic array) and the ~16 MiB/core VMEM budget
+#     ((bm*bk + bk*bn + bm*bn) * 4B per grid step). This is what DESIGN.md
+#     §9 estimates perf from.
+#   * "cpu"  — the interpret-mode schedule used for the AOT artifacts in
+#     this repo: interpret=True emulates each grid step with full-array
+#     dynamic slices, so emulation overhead is proportional to grid size
+#     and the fastest schedule is the *largest* tile that still divides
+#     the dims (one grid step when possible). Numerics are identical
+#     across profiles (test_kernels.py::test_block_shape_invariance).
+#
+# Select with STATQUANT_KERNEL_PROFILE=tpu|cpu (default cpu) at AOT time.
+import os
+
+PROFILES = {
+    "tpu": {
+        "mm_bm": 256,
+        "mm_bk": 256,
+        "mm_bn": 256,
+        "sr_rows": 512,
+        "sr_cols": 512,
+    },
+    "cpu": {
+        "mm_bm": 1 << 16,
+        "mm_bk": 4096,
+        "mm_bn": 4096,
+        "sr_rows": 1 << 16,
+        "sr_cols": 1 << 16,
+    },
+}
+
+_active = os.environ.get("STATQUANT_KERNEL_PROFILE", "cpu")
+
+
+def set_profile(name):
+    global _active
+    if name not in PROFILES:
+        raise ValueError(f"unknown kernel profile {name!r}")
+    _active = name
+
+
+def active():
+    return _active
+
+
+def get(key):
+    return PROFILES[_active][key]

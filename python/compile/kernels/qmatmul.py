@@ -1,0 +1,105 @@
+# L1 Pallas kernel: blocked matmul — the low-bitwidth GEMM stand-in.
+#
+# In real INT8 FQT hardware this is the tensor-core / MXU integer GEMM over
+# quantized operands. We follow the paper's own methodology (Appendix E:
+# "we simulate the training with FP32"): operands are quantized values
+# stored in f32, so the statistics of training are bit-exact with an INT
+# pipeline while remaining executable on the CPU PJRT backend.
+#
+# TPU adaptation (DESIGN.md §3): classic MXU tiling. The (bm, bk) x
+# (bk, bn) blocks are staged HBM->VMEM by BlockSpec; the k-dimension is the
+# innermost grid axis so the f32 accumulator tile stays resident in VMEM
+# across the contraction (revisiting semantics of the output BlockSpec).
+# Block default 128 matches the 128x128 MXU systolic array. On CUDA the
+# paper's kernels would express this with threadblock tiles + shared
+# memory; BlockSpec is the TPU-side equivalent of that schedule.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import profile
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid (i, j, k): o[i,j] += a[i,k] @ b[k,j], accumulate over k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick(dim, ideal):
+    """Largest divisor of `dim` that is <= `ideal`.
+
+    Interpret-mode pallas fills out-of-bounds reads of ragged edge blocks
+    with NaN (by design, to surface masking bugs), and a matmul
+    accumulation would propagate them — so blocks must tile exactly. If
+    only tiny divisors exist (prime-ish dims), fall back to one full
+    block: on the interpret path a single grid step is also the fastest
+    schedule, and on real TPU these shapes are padded upstream.
+    """
+    if dim <= ideal:
+        return dim
+    best = 1
+    for d in range(ideal, 0, -1):
+        if dim % d == 0:
+            best = d
+            break
+    if best < max(ideal // 4, 1):
+        return dim
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def _qmatmul(a, b, *, bm, bk, bn):
+    """Blocked matmul a @ b over quantized-value operands.
+
+    VMEM footprint per grid step is (bm*bk + bk*bn + bm*bn) * 4 bytes;
+    defaults keep it well under the 16 MiB/core budget while the k-inner
+    grid order preserves accumulator locality (see DESIGN.md §9).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm_, bk_, bn_ = _pick(m, bm), _pick(k, bk), _pick(n, bn)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(n, bn_), pl.cdiv(k, bk_))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def qmatmul(a, b, *, bm=None, bk=None, bn=None):
+    """Profile-aware entry point: tile sizes default to the active kernel
+    profile (see kernels/profile.py — TPU-shaped vs interpret-optimal)."""
+    return _qmatmul(
+        a,
+        b,
+        bm=bm or profile.get("mm_bm"),
+        bk=bk or profile.get("mm_bk"),
+        bn=bn or profile.get("mm_bn"),
+    )
+
+
+def qmatmul_tn(a, b, **kw):
+    """a.T @ b — the weight-gradient product H~^T @ Q_b1(grad)."""
+    return qmatmul(a.T, b, **kw)
+
+
+def qmatmul_nt(a, b, **kw):
+    """a @ b.T — the activation-gradient product Q_b2(grad) @ W~^T."""
+    return qmatmul(a, b.T, **kw)

@@ -1,0 +1,56 @@
+# Pure-jnp correctness oracles for the L1 Pallas kernels.
+#
+# Every Pallas kernel in this package has an exact reference here; pytest
+# (python/tests/) asserts allclose between the kernel (interpret=True) and
+# these functions over hypothesis-driven shape/dtype sweeps. These oracles
+# are the CORE correctness signal for the L1 layer.
+import jax.numpy as jnp
+
+
+def sr_quant_ref(y, scale, zero, noise, nbins):
+    """Fused affine stochastic-round quantize/dequantize (row-wise params).
+
+    Given an input matrix ``y`` (already rotated for BHQ; raw gradient for
+    PTQ/PSQ), per-row ``scale`` and ``zero`` (shape (N, 1)), uniform noise
+    ``u ~ U[0,1)`` of the same shape as ``y``, and the number of bins
+    ``nbins`` (= 2^bits - 1, may be a traced scalar):
+
+        t    = scale * (y - zero)            # map into [0, nbins]
+        q    = clip(floor(t + u), 0, nbins)  # stochastic rounding
+        yhat = q / scale + zero              # dequantize
+
+    Returns ``(q, yhat)``. Stochastic rounding floor(t+u) is unbiased:
+    E[floor(t + u)] = t for u ~ U[0,1) whenever 0 <= t <= nbins.
+    """
+    t = scale * (y - zero)
+    q = jnp.clip(jnp.floor(t + noise), 0.0, nbins)
+    yhat = q / scale + zero
+    return q, yhat
+
+
+def rn_quant_ref(y, scale, zero, nbins):
+    """Deterministic round-to-nearest quantize/dequantize (forward path).
+
+    Used for Q_f (activations) and Q_theta (weights) in QAT/FQT forward
+    propagation, which the framework requires to be deterministic.
+    """
+    t = scale * (y - zero)
+    q = jnp.clip(jnp.round(t), 0.0, nbins)
+    yhat = q / scale + zero
+    return q, yhat
+
+
+def matmul_ref(a, b):
+    """Plain f32 matmul oracle for the blocked Pallas qmatmul kernel."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def rowstats_ref(x):
+    """Per-row (min, max) reduction oracle.
+
+    Returns (rmin, rmax) each of shape (N, 1). R(row) = rmax - rmin is the
+    dynamic range that sets the PSQ scale s_i = B / R(row_i).
+    """
+    rmin = jnp.min(x, axis=1, keepdims=True)
+    rmax = jnp.max(x, axis=1, keepdims=True)
+    return rmin, rmax

@@ -1,0 +1,152 @@
+# L2: quantized layers with the paper's FQT backward pass (Eq. 4-6).
+#
+# `qlinear` is the single quantized compute primitive every model routes
+# through (fully-connected directly; convolutions via im2col). It is a
+# jax.custom_vjp whose
+#
+#   forward  (Eq. 3):  out = Q_f(H) @ Q_theta(W)          [deterministic]
+#   backward (Eq. 6), with gradient bifurcation [Banner et al. '18]:
+#       grad_W = Q_f(H)^T @ Q_b1(g)      Q_b1 = 8-bit stochastic PTQ
+#       grad_H = Q_b2(g)  @ Q_theta(W)^T Q_b2 = PTQ/PSQ/BHQ @ runtime bits
+#
+# The straight-through estimator is implicit: grad_H flows as if Q_f were
+# the identity, exactly Eq. (4)'s convention.
+#
+# Randomness: each training step carries one f32 `seed` scalar across the
+# Rust<->HLO ABI; every layer folds in its static layer_id (and a b1/b2
+# lane) so all quantizers draw independent streams. custom_vjp returns a
+# zero cotangent for `seed` and `bits`.
+import jax
+import jax.numpy as jnp
+
+from . import quantizers as Q
+from .kernels import qmatmul
+
+# Toggle to route GEMMs through the L1 Pallas kernel (default) or plain
+# jnp (used to isolate kernel overhead in the perf pass; artifacts always
+# ship the kernel path unless aot.py is told otherwise).
+USE_PALLAS_GEMM = True
+
+
+def _mm(a, b):
+    if USE_PALLAS_GEMM:
+        return qmatmul(a, b)
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def _seed_key(seed, layer_id, lane):
+    """Derive an independent PRNG stream from the ABI seed scalar."""
+    base = jax.random.PRNGKey(jnp.asarray(seed, jnp.float32).astype(jnp.uint32))
+    return jax.random.fold_in(jax.random.fold_in(base, layer_id), lane)
+
+
+def make_qlinear(layer_id, qcfg: Q.QuantConfig, sample_count=None,
+                 h_prequantized=False):
+    """Build the quantized linear primitive for one layer.
+
+    Args:
+      layer_id: static int, unique per qlinear call site in the model.
+      qcfg: static QuantConfig (variant + forward bitwidths).
+      sample_count: static batch size N for the per-sample gradient view
+        (None = rows are samples; conv layers pass N explicitly).
+      h_prequantized: the caller already applied Q_f to `h` (conv layers
+        quantize the activation *before* im2col, so the 9x-duplicated
+        patch matrix is not re-quantized — identical values, 9x less
+        work; see DESIGN.md §Perf).
+
+    Returns:
+      qlinear(h, w, seed, bits) -> h @ w with the FQT backward.
+    """
+    fwd_bins = float(2**qcfg.fwd_bits - 1)
+    b1_bins = float(2**qcfg.b1_bits - 1)
+
+    @jax.custom_vjp
+    def qlinear(h, w, seed, bits):
+        out, _ = _fwd(h, w, seed, bits)
+        return out
+
+    def _fwd(h, w, seed, bits):
+        if qcfg.quantizes_fwd:
+            ht = h if h_prequantized else Q.ptq_det(h, fwd_bins)
+            wt = Q.ptq_det(w, fwd_bins)
+        else:
+            ht, wt = h, w
+        out = _mm(ht, wt)
+        return out, (ht, wt, seed, bits)
+
+    def _bwd(res, g):
+        ht, wt, seed, bits = res
+        if qcfg.quantizes_grad:
+            bins = Q.nbins(bits)
+            g1 = Q.ptq_stoch(g, _seed_key(seed, layer_id, 1), b1_bins)
+            g2 = Q.quantize_grad(
+                qcfg.kind, g, _seed_key(seed, layer_id, 2), bins, sample_count
+            )
+        else:  # exact / QAT: full-precision backward
+            g1 = g2 = g
+        dw = _mm(ht.T, g1)
+        dh = _mm(g2, wt.T)
+        return dh, dw, jnp.zeros(()), jnp.zeros(())
+
+    qlinear.defvjp(_fwd, _bwd)
+    return qlinear
+
+
+def ste_quantize(x, bins):
+    """Straight-through Q_f: forward = deterministic per-tensor
+    round-to-nearest, backward = identity (Eq. 4's STE convention).
+    Used by conv layers to quantize the activation before im2col."""
+
+    @jax.custom_vjp
+    def q(x):
+        return Q.ptq_det(x, bins)
+
+    q.defvjp(lambda x: (Q.ptq_det(x, bins), None), lambda _, g: (g,))
+    return q(x)
+
+
+def make_qidentity(layer_id, qcfg: Q.QuantConfig, sample_count=None):
+    """Quantization tap for non-GEMM layers (paper: "we quantize the inputs
+    and gradients of batch normalization layers").
+
+    Forward: deterministic Q_f (STE). Backward: Q_b2 on the incoming
+    gradient. A no-op for exact; forward-only for QAT.
+    """
+    fwd_bins = float(2**qcfg.fwd_bits - 1)
+
+    @jax.custom_vjp
+    def qid(x, seed, bits):
+        return Q.ptq_det(x, fwd_bins) if qcfg.quantizes_fwd else x
+
+    def _fwd(x, seed, bits):
+        return qid(x, seed, bits), (x.shape, seed, bits)
+
+    def _bwd(res, g):
+        shape, seed, bits = res
+        if qcfg.quantizes_grad:
+            g2 = g.reshape(shape[0], -1)
+            g2 = Q.quantize_grad(
+                qcfg.kind,
+                g2,
+                _seed_key(seed, layer_id, 3),
+                Q.nbins(bits),
+                sample_count,
+            )
+            g = g2.reshape(shape)
+        return g, jnp.zeros(()), jnp.zeros(())
+
+    qid.defvjp(_fwd, _bwd)
+    return qid
+
+
+class LayerIds:
+    """Monotone layer-id allocator so every quantized call site in a model
+    gets a distinct PRNG stream."""
+
+    def __init__(self):
+        self._next = 0
+
+    def fresh(self):
+        i = self._next
+        self._next += 1
+        return i

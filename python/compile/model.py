@@ -1,0 +1,175 @@
+# L2 facade: build the step functions that cross the Rust <-> HLO ABI.
+#
+# Every artifact is one jitted function over *flat f32 state vectors*
+# (jax.flatten_util.ravel_pytree at trace time), so the Rust runtime never
+# needs to know the parameter pytree:
+#
+#   train:   (params[P], momentum[P], x, y, seed, lr, bits)
+#               -> (params'[P], momentum'[P], loss, acc)
+#   probe:   (params[P], x, y, seed, bits) -> (loss, grad[P])
+#   eval:    (params[P], x, y)             -> (loss, acc)
+#   actgrad: (params[P], x, y, seed)       -> dL/dH_probe  (QAT graph)
+#
+# `bits` is a runtime scalar (B = 2^bits - 1 in-graph): one artifact per
+# (model, variant) serves the whole bitwidth sweep. The optimizer
+# (momentum SGD, the paper's setting) is fused into the train step so the
+# Rust hot loop is a single PJRT execute per step.
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from . import quantizers as Q
+from .models import cnn, mlp, transformer
+
+MODELS = {
+    "mlp": (mlp, mlp.Config()),
+    "cnn": (cnn, cnn.Config()),
+    "resnet": (cnn, cnn.RESNET),
+    "transformer": (transformer, transformer.Config()),
+}
+
+MOMENTUM = 0.9  # paper Appendix E (CIFAR10: 0.9; ImageNet: 0.875)
+
+
+@dataclass
+class BuiltModel:
+    """A model instance plus its flat-parameter codec and step functions."""
+
+    name: str
+    cfg: object
+    mod: object
+    qcfg: Q.QuantConfig
+    params0_flat: np.ndarray
+    unravel: object
+
+    @property
+    def n_params(self):
+        return int(self.params0_flat.size)
+
+
+def build(model_name: str, variant: str, seed: int = 0) -> BuiltModel:
+    mod, cfg = MODELS[model_name]
+    qcfg = Q.QuantConfig(kind=variant)
+    rng = np.random.default_rng(seed)
+    params = mod.init(rng, cfg)
+    flat, unravel = ravel_pytree(params)
+    return BuiltModel(
+        name=model_name,
+        cfg=cfg,
+        mod=mod,
+        qcfg=qcfg,
+        params0_flat=np.asarray(flat, np.float32),
+        unravel=unravel,
+    )
+
+
+def _xy_specs(cfg):
+    """ShapeDtypeStructs for a data batch (x, y)."""
+    xdt = jnp.float32 if cfg.input_dtype == "f32" else jnp.int32
+    x = jax.ShapeDtypeStruct(cfg.input_shape, xdt)
+    if cfg.name == "transformer":
+        y = jax.ShapeDtypeStruct(cfg.input_shape, jnp.int32)
+    else:
+        y = jax.ShapeDtypeStruct((cfg.input_shape[0],), jnp.int32)
+    return x, y
+
+
+def make_train_step(bm: BuiltModel):
+    """Fused fwd + bwd + momentum-SGD step over flat state."""
+
+    def step(flat_p, flat_m, x, y, seed, lr, bits):
+        params = bm.unravel(flat_p)
+
+        def loss(p):
+            return bm.mod.loss_fn(p, x, y, seed, bits, bm.qcfg, bm.cfg)
+
+        (l, acc), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        flat_g, _ = ravel_pytree(grads)
+        new_m = MOMENTUM * flat_m + flat_g
+        new_p = flat_p - lr * new_m
+        return new_p, new_m, l, acc
+
+    return step
+
+
+def make_probe_step(bm: BuiltModel):
+    """Gradient probe: same graph as train minus the update; Rust runs it
+    K times with different seeds to Welford-estimate Var[grad | batch]."""
+
+    def step(flat_p, x, y, seed, bits):
+        params = bm.unravel(flat_p)
+
+        def loss(p):
+            l, _ = bm.mod.loss_fn(p, x, y, seed, bits, bm.qcfg, bm.cfg)
+            return l
+
+        l, grads = jax.value_and_grad(loss)(params)
+        flat_g, _ = ravel_pytree(grads)
+        return l, flat_g
+
+    return step
+
+
+def make_eval_step(bm: BuiltModel):
+    def step(flat_p, x, y):
+        params = bm.unravel(flat_p)
+        l, acc = bm.mod.loss_fn(
+            params, x, y, jnp.zeros(()), jnp.asarray(8.0), bm.qcfg, bm.cfg
+        )
+        return l, acc
+
+    return step
+
+
+def make_actgrad_step(bm: BuiltModel):
+    """Activation-gradient probe for the Fig-4 histogram experiment:
+    returns dL/dH at the model's probe layer, flattened to the paper's
+    (N, D) per-sample view. Built on the QAT graph (deterministic
+    backward), so it captures the gradient *entering* Q_b; the Rust-native
+    quantizers then bin it per Fig 4."""
+
+    def step(flat_p, x, y, seed):
+        params = bm.unravel(flat_p)
+        shape = bm.mod.probe_shape(bm.cfg)
+
+        def loss(tap):
+            l, _ = bm.mod.loss_fn(
+                params, x, y, seed, jnp.asarray(8.0), bm.qcfg, bm.cfg,
+                probe_tap=tap,
+            )
+            return l
+
+        tap0 = jnp.zeros(shape, jnp.float32)
+        g = jax.grad(loss)(tap0)
+        n = bm.cfg.input_shape[0]
+        return g.reshape(n, -1)
+
+    return step
+
+
+def lower_step(bm: BuiltModel, kind: str):
+    """jit + lower one step function with the artifact's example args."""
+    p = jax.ShapeDtypeStruct((bm.n_params,), jnp.float32)
+    x, y = _xy_specs(bm.cfg)
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+    if kind == "train":
+        fn, args = make_train_step(bm), (p, p, x, y, s, s, s)
+        donate = (0, 1)
+    elif kind == "probe":
+        fn, args = make_probe_step(bm), (p, x, y, s, s)
+        donate = ()
+    elif kind == "eval":
+        fn, args = make_eval_step(bm), (p, x, y)
+        donate = ()
+    elif kind == "actgrad":
+        fn, args = make_actgrad_step(bm), (p, x, y, s)
+        donate = ()
+    else:
+        raise ValueError(kind)
+    # keep_unused: exact/qat variants ignore seed/bits, but the ABI (and
+    # the Rust runtime) passes them for every variant — jit would
+    # otherwise prune the parameters out of the lowered HLO.
+    return jax.jit(fn, donate_argnums=donate, keep_unused=True).lower(*args), args

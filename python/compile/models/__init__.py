@@ -1,0 +1,2 @@
+# L2 model zoo: MLP, MiniCNN/MiniResNet (ResNet stand-ins), Transformer LM.
+from . import cnn, mlp, transformer  # noqa: F401

@@ -1,0 +1,146 @@
+# MiniResNet — the ResNet-family stand-in (DESIGN.md §4 substitutions).
+#
+# Pre-activation residual CNN in the ResNet-v2 style [He et al. '16] used
+# by the paper's CIFAR10 experiments, scaled to run in minutes on the CPU
+# PJRT backend. Two named configs:
+#   "cnn"    — ResNet18 stand-in: 16x16 input, 1 block/stage, widths 16/32
+#   "resnet" — ResNet50/56 stand-in: deeper + wider + 32x32 input
+#
+# Every convolution is im2col + the quantized `qlinear` GEMM, so the FQT
+# backward (bifurcated Q_b1/Q_b2) applies to every conv exactly as the
+# paper prescribes; BN inputs/gradients are quantized through `qidentity`
+# taps ("we quantize the inputs and gradients of batch normalization
+# layers"). The per-sample gradient view for PSQ/BHQ reshapes the
+# (N*OH*OW, C) conv gradient to (N, OH*OW*C) — the paper's N x D^(l)
+# layout.
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..layers import LayerIds, make_qidentity, make_qlinear, ste_quantize
+from .common import batchnorm, cross_entropy, im2col
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str = "cnn"
+    image: int = 16
+    channels: int = 3
+    widths: tuple = (16, 32)
+    blocks_per_stage: int = 1
+    classes: int = 10
+    batch: int = 32
+
+    @property
+    def input_shape(self):
+        return (self.batch, self.image, self.image, self.channels)
+
+    @property
+    def input_dtype(self):
+        return "f32"
+
+
+RESNET = Config(
+    name="resnet", image=32, widths=(16, 32, 64), blocks_per_stage=2, batch=32
+)
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = rng.normal(0.0, np.sqrt(2.0 / fan_in), (kh * kw * cin, cout))
+    return jnp.asarray(w.astype(np.float32))
+
+
+def _bn_init(c):
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def init(rng: np.random.Generator, cfg: Config):
+    params = {"stem": _conv_init(rng, 3, 3, cfg.channels, cfg.widths[0])}
+    stages = []
+    cin = cfg.widths[0]
+    for w in cfg.widths:
+        blocks = []
+        for b in range(cfg.blocks_per_stage):
+            c0 = cin if b == 0 else w
+            blk = {
+                "bn1": _bn_init(c0),
+                "conv1": _conv_init(rng, 3, 3, c0, w),
+                "bn2": _bn_init(w),
+                "conv2": _conv_init(rng, 3, 3, w, w),
+            }
+            if c0 != w:
+                blk["proj"] = _conv_init(rng, 1, 1, c0, w)
+            blocks.append(blk)
+        stages.append(blocks)
+        cin = w
+    params["stages"] = stages
+    params["bn_out"] = _bn_init(cfg.widths[-1])
+    fc = rng.normal(0.0, np.sqrt(1.0 / cfg.widths[-1]), (cfg.widths[-1], cfg.classes))
+    params["fc_w"] = jnp.asarray(fc.astype(np.float32))
+    params["fc_b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return params
+
+
+def _conv(ids, qcfg, cfg, x, w, seed, bits, kh, kw, stride, pad):
+    """Quantized convolution: Q_f(H) -> im2col -> qlinear GEMM.
+
+    Q_f is applied to the activation *before* patch extraction: the patch
+    matrix duplicates every pixel ~kh*kw times, and quantizing first gives
+    bit-identical patches at 1/(kh*kw) the quantization work."""
+    n = x.shape[0]
+    if qcfg.quantizes_fwd:
+        fwd_bins = float(2**qcfg.fwd_bits - 1)
+        x = ste_quantize(x.reshape(n, -1), fwd_bins).reshape(x.shape)
+    patches, (oh, ow) = im2col(x, kh, kw, stride, pad)
+    qlin = make_qlinear(ids.fresh(), qcfg, sample_count=n, h_prequantized=True)
+    out = qlin(patches, w, seed, bits)
+    return out.reshape(n, oh, ow, -1)
+
+
+def apply(params, x, seed, bits, qcfg, cfg: Config, probe_tap=None):
+    """Forward -> logits (N, classes). probe_tap (optional zeros of
+    probe_shape) is added before the final stage's first conv; its
+    gradient is the Fig-4 activation gradient."""
+    ids = LayerIds()
+    h = _conv(ids, qcfg, cfg, x, params["stem"], seed, bits, 3, 3, 1, 1)
+    n_stages = len(params["stages"])
+    for si, blocks in enumerate(params["stages"]):
+        stride = 1 if si == 0 else 2
+        if probe_tap is not None and si == n_stages - 1:
+            h = h + probe_tap.reshape(h.shape)
+        for bi, blk in enumerate(blocks):
+            s = stride if bi == 0 else 1
+            qid1 = make_qidentity(ids.fresh(), qcfg, sample_count=h.shape[0])
+            pre = batchnorm(blk["bn1"], qid1(h, seed, bits))
+            pre = jnp.maximum(pre, 0.0)
+            out = _conv(ids, qcfg, cfg, pre, blk["conv1"], seed, bits, 3, 3, s, 1)
+            qid2 = make_qidentity(ids.fresh(), qcfg, sample_count=out.shape[0])
+            out = batchnorm(blk["bn2"], qid2(out, seed, bits))
+            out = jnp.maximum(out, 0.0)
+            out = _conv(ids, qcfg, cfg, out, blk["conv2"], seed, bits, 3, 3, 1, 1)
+            if "proj" in blk:
+                h = _conv(ids, qcfg, cfg, pre, blk["proj"], seed, bits, 1, 1, s, 0)
+            h = h + out
+    h = jnp.maximum(batchnorm(params["bn_out"], h), 0.0)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    qlin = make_qlinear(ids.fresh(), qcfg, sample_count=h.shape[0])
+    return qlin(h, params["fc_w"], seed, bits) + params["fc_b"]
+
+
+def probe_shape(cfg: Config):
+    """Activation shape entering the last stage (pre-downsample)."""
+    n_stages = len(cfg.widths)
+    # spatial after stage i>0 halves; before last stage there have been
+    # n_stages-2 halvings past the stem stage.
+    size = cfg.image // (2 ** max(n_stages - 2, 0))
+    return (cfg.batch, size, size, cfg.widths[n_stages - 2])
+
+
+def loss_fn(params, x, y, seed, bits, qcfg, cfg: Config, probe_tap=None):
+    logits = apply(params, x, seed, bits, qcfg, cfg, probe_tap)
+    return cross_entropy(logits, y)

@@ -1,0 +1,56 @@
+# Shared model-zoo helpers: losses, norms, im2col convolution plumbing.
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, y):
+    """Mean softmax cross-entropy over integer labels + accuracy aux."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def im2col(x, kh, kw, stride, pad):
+    """Extract conv patches as a GEMM-ready matrix.
+
+    x: (N, H, W, C). Returns (patches (N*OH*OW, kh*kw*C), (OH, OW)).
+    The kernel loop is a static Python unroll (kh*kw slices), so the
+    lowered HLO is a fixed concatenate — no gather, no dynamic shapes.
+    Weight layout convention: (kh*kw*C, Cout) with (i, j, c) varying in
+    the same row-major order as the concatenation below.
+    """
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    n, h, w, c = xp.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                xp[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            )
+    patches = jnp.concatenate(cols, axis=-1)  # (N, OH, OW, kh*kw*C)
+    return patches.reshape(n * oh * ow, kh * kw * c), (oh, ow)
+
+
+def batchnorm(params, x, eps=1e-5):
+    """Batch-statistics normalization over (N, H, W) per channel.
+
+    Batch stats are used at both train and eval time (DESIGN.md §4
+    substitution: no running-statistics state crosses the Rust ABI; eval
+    batches share the train batch size, so the estimator is consistent).
+    """
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * params["gamma"] + params["beta"]
+
+
+def layernorm(params, x, eps=1e-5):
+    """LayerNorm over the trailing feature axis (transformer blocks)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * params["gamma"] + params["beta"]

@@ -1,0 +1,71 @@
+# MLP classifier — the smallest member of the model zoo.
+#
+# Used by the quickstart example, the fast unit/integration tests, and the
+# Thm-1/Eq-10 statistical validation experiments where thousands of probe
+# steps are required. Every linear layer routes through the quantized
+# `qlinear` primitive, so even this model exercises the full FQT stack.
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..layers import LayerIds, make_qlinear
+from .common import cross_entropy
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str = "mlp"
+    in_dim: int = 64
+    hidden: tuple = (128, 128)
+    classes: int = 10
+    batch: int = 64
+
+    @property
+    def input_shape(self):
+        return (self.batch, self.in_dim)
+
+    @property
+    def input_dtype(self):
+        return "f32"
+
+
+def init(rng: np.random.Generator, cfg: Config):
+    """He-initialized parameters as a pytree of f32 arrays."""
+    dims = (cfg.in_dim,) + tuple(cfg.hidden) + (cfg.classes,)
+    layers = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        w = rng.normal(0.0, np.sqrt(2.0 / din), (din, dout)).astype(np.float32)
+        b = np.zeros((dout,), np.float32)
+        layers.append({"w": jnp.asarray(w), "b": jnp.asarray(b)})
+    return {"layers": layers}
+
+
+def apply(params, x, seed, bits, qcfg, cfg: Config, probe_tap=None):
+    """Forward pass -> logits (N, classes).
+
+    probe_tap: optional zeros tensor added at the penultimate activation;
+    its gradient is the activation gradient the Fig-4 experiment probes.
+    """
+    ids = LayerIds()
+    h = x
+    n_layers = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        qlin = make_qlinear(ids.fresh(), qcfg, sample_count=cfg.batch)
+        if probe_tap is not None and i == n_layers - 1:
+            h = h + probe_tap
+        h = qlin(h, layer["w"], seed, bits) + layer["b"]
+        if i < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def probe_shape(cfg: Config):
+    """Shape of the activation the Fig-4 histogram experiment taps."""
+    return (cfg.batch, cfg.hidden[-1])
+
+
+def loss_fn(params, x, y, seed, bits, qcfg, cfg: Config, probe_tap=None):
+    """Mean softmax cross-entropy + accuracy aux."""
+    logits = apply(params, x, seed, bits, qcfg, cfg, probe_tap)
+    return cross_entropy(logits, y)

@@ -1,0 +1,388 @@
+# L2: the paper's gradient quantizers (Sections 3.3 and 4, Appendix D).
+#
+# All quantizers share the affine form of Eq. (11):
+#
+#     Q_b(X) = S^{-1} SR( S (X - 1 z) ) + 1 z
+#
+# with SR = stochastic rounding (unbiased), and differ only in the scale
+# matrix S:
+#
+#   PTQ  (per-tensor, §3.3):  S = s I,            s = B / R(X)
+#   PSQ  (per-sample,  §4.1): S = diag(s_1..s_N), s_i = B / R(x_i)
+#   BHQ  (block Householder, §4.2 + App. D.5):
+#        S = Q diag(s),  Q = blockdiag of I - 2 n n^T / |n|^2,
+#        n = 1/sqrt(m) - e_leader per row-group; groups built by the
+#        Appendix-D.5 heuristic (sort rows by |row|_inf, sweep G, group
+#        sizes proportional to leader magnitude, argmin variance proxy).
+#
+# Extension formats for the Table-2 comparison (DESIGN.md E6): FP8-sim
+# (E4M3/E5M2 with stochastic rounding) and BFP (block floating point).
+#
+# Every quantizer is an *unbiased* stochastic estimator of its input —
+# deterministic affine maps composed with unbiased SR (Theorem 1's only
+# requirement on Q_b). The per-element SR hot path runs in the L1 Pallas
+# kernel (kernels/sr_quant.py); reductions / sorting / group construction
+# stay in jnp (they are O(N log N) on N = batch rows, negligible next to
+# the O(N D) rounding pass — the paper's §4.3 measures the same split).
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qmatmul, rn_quant, sr_quant
+
+# Numerical floors: zero-dynamic-range rows/tensors would otherwise
+# produce inf scales (a correctly-classified sample can have an exactly
+# zero gradient row). A row with range <= _EPS_RANGE is reproduced
+# exactly by the quantizer (scale caps keep s * x finite).
+_EPS_RANGE = 1e-20
+_MAX_SCALE = 1e20
+
+GRAD_QUANTIZERS = ("ptq", "psq", "bhq", "fp8", "bfp")
+VARIANTS = ("exact", "qat") + GRAD_QUANTIZERS
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization configuration baked into one AOT artifact.
+
+    kind: one of VARIANTS — 'exact' (no quantization anywhere), 'qat'
+      (forward quantized, full-precision backward), or a gradient
+      quantizer name (forward quantized + bifurcated quantized backward,
+      Eq. 6). The Q_b2 bitwidth is a *runtime* scalar, not part of this
+      config.
+    fwd_bits: deterministic forward quantization (Q_f, Q_theta) bitwidth.
+    b1_bits: Q_b1 bitwidth (the 8-bit stochastic PTQ used for the weight
+      gradient product in the bifurcation, Appendix E).
+    """
+
+    kind: str = "ptq"
+    fwd_bits: int = 8
+    b1_bits: int = 8
+
+    @property
+    def quantizes_grad(self) -> bool:
+        return self.kind in GRAD_QUANTIZERS
+
+    @property
+    def quantizes_fwd(self) -> bool:
+        return self.kind != "exact"
+
+
+def nbins(bits):
+    """B = 2^bits - 1 (traced-friendly: bits may be a runtime f32 scalar)."""
+    return jnp.exp2(jnp.asarray(bits, jnp.float32)) - 1.0
+
+
+# ---------------------------------------------------------------------------
+# Deterministic forward quantizers (Q_f, Q_theta) — round-to-nearest PTQ.
+# ---------------------------------------------------------------------------
+
+
+def ptq_det(x, bins):
+    """Per-tensor round-to-nearest quantize-dequantize (forward path).
+
+    Keeps the tensor's natural leading dimension as kernel rows (a (1, K)
+    reshape would serialize the interpret-mode grid along one huge axis);
+    the per-tensor scale/zero are broadcast to the per-row lanes.
+    """
+    shape = x.shape
+    x2 = x.reshape(shape[0], -1) if x.ndim >= 2 else x.reshape(1, -1)
+    n = x2.shape[0]
+    lo = jnp.min(x2)
+    rng = jnp.maximum(jnp.max(x2) - lo, _EPS_RANGE)
+    s = jnp.minimum(bins / rng, _MAX_SCALE)
+    scale = jnp.full((n, 1), s, jnp.float32)
+    zero = jnp.full((n, 1), lo, jnp.float32)
+    _, deq = rn_quant(x2, scale, zero, bins)
+    return deq.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic gradient quantizers Q_b.
+# ---------------------------------------------------------------------------
+
+
+def ptq_stoch(x, key, bins):
+    """Per-tensor stochastic quantizer (§3.3) — the INT8-training baseline."""
+    n, d = x.shape
+    lo = jnp.min(x)
+    rng = jnp.maximum(jnp.max(x) - lo, _EPS_RANGE)
+    s = jnp.minimum(bins / rng, _MAX_SCALE)
+    scale = jnp.full((n, 1), s, jnp.float32)
+    zero = jnp.full((n, 1), lo, jnp.float32)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    _, deq = sr_quant(x, scale, zero, u, bins)
+    return deq
+
+
+def psq(x, key, bins):
+    """Per-sample quantizer (§4.1): s_i = B / R(x_i), z_i = min(x_i)."""
+    lo = jnp.min(x, axis=1, keepdims=True)
+    rng = jnp.maximum(jnp.max(x, axis=1, keepdims=True) - lo, _EPS_RANGE)
+    scale = jnp.minimum(bins / rng, _MAX_SCALE)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    _, deq = sr_quant(x, scale, lo, u, bins)
+    return deq
+
+
+def _bhq_group_candidates(n):
+    """Static sweep set for the number of groups G (App. D.5 step 2).
+
+    Includes G = N: all-singleton groups make Q = I and s1 = B/R(row) —
+    exactly PSQ. Without this fallback BHQ is strictly worse than PSQ on
+    *homogeneous* gradients (no outlier rows), where any grouping smears
+    equal-magnitude rows together (variance ~ m^2 per group, Appendix
+    D.4). With it, BHQ >= PSQ everywhere and wins when outliers exist."""
+    cands = []
+    g = 1
+    while g <= max(n // 2, 1):
+        cands.append(g)
+        g *= 2
+    if n not in cands:
+        cands.append(n)
+    return tuple(cands)
+
+
+def bhq_groups(mags, n_rows, proxy="extended"):
+    """Appendix-D.5 group construction on sorted row magnitudes.
+
+    Args:
+      mags: (N,) row magnitudes |row|_inf sorted in DESCENDING order.
+      n_rows: static N.
+      proxy: "paper" uses Appendix D.5's variance proxy
+        sum_i M_i^2 / m_i with m_i ~ 1 + (N-G) M_i / sum_{j<G} M_j.
+        "extended" (default) uses the full D.4 per-group bound
+        sum_i (M_i^{2/3} m_i^{-1/3} + lam2^{2/3} m_i^{2/3})^3 with
+        lam2 ~ 2 M_G (largest non-leader magnitude). The paper's proxy is
+        the lam2 -> 0 limit of this; it is blind to a second outlier row
+        that lands *inside* a group (it would pick G=1 for two equal
+        outliers). The `exp ablate-bhq-proxy` experiment quantifies the
+        difference; both are available here and in rust/src/quant/bhq.rs.
+
+    Returns:
+      (gid, n_groups): gid[i] = group id of sorted row i (leaders are rows
+      0..G-1, gid[i] = i for i < G); n_groups = traced selected G.
+    """
+    idx = jnp.arange(n_rows)
+    proxies = []
+    cands = _bhq_group_candidates(n_rows)
+    for g in cands:
+        topmask = idx < g
+        mtop = jnp.where(topmask, mags, 0.0)
+        tot = jnp.maximum(jnp.sum(mtop), _EPS_RANGE)
+        sizes = 1.0 + (n_rows - g) * mtop / tot
+        if proxy == "paper":
+            proxies.append(jnp.sum(jnp.where(topmask, mtop**2 / sizes, 0.0)))
+        else:
+            lam2 = 2.0 * (mags[g] if g < n_rows else 0.0)
+            term = (
+                jnp.maximum(mtop, _EPS_RANGE) ** (2 / 3) * sizes ** (-1 / 3)
+                + lam2 ** (2 / 3) * sizes ** (2 / 3)
+            ) ** 3
+            proxies.append(jnp.sum(jnp.where(topmask, term, 0.0)))
+    proxies = jnp.stack(proxies)
+    best = jnp.argmin(proxies)
+    n_groups = jnp.asarray(cands)[best]
+
+    # Assign non-leader rows to groups by cumulative fractional group size.
+    topmask = idx < n_groups
+    mtop = jnp.where(topmask, mags, 0.0)
+    tot = jnp.maximum(jnp.sum(mtop), _EPS_RANGE)
+    extras = (n_rows - n_groups) * mtop / tot  # fractional extra rows/group
+    bounds = jnp.cumsum(extras)  # bounds[G-1] == N - G
+    pos = idx.astype(jnp.float32) - n_groups.astype(jnp.float32) + 0.5
+    assigned = jnp.searchsorted(bounds, pos, side="left")
+    assigned = jnp.minimum(assigned, n_groups - 1)
+    gid = jnp.where(topmask, idx, assigned)
+    return gid, n_groups
+
+
+def _bhq_matrices(xs, gid, bins):
+    """Build per-row scales and the block-Householder Q for sorted rows.
+
+    Returns (srow (N,1), Q (N,N)). Q is symmetric orthogonal (Q = Q^T,
+    Q^2 = I) because it is a direct sum of Householder reflections over
+    disjoint row groups.
+    """
+    n = xs.shape[0]
+    idx = jnp.arange(n)
+    is_leader = gid == idx
+
+    mags = jnp.max(jnp.abs(xs), axis=1)  # |row|_inf (sorted order)
+    rowrange = jnp.max(xs, axis=1) - jnp.min(xs, axis=1)
+
+    m_g = jax.ops.segment_sum(jnp.ones(n), gid, num_segments=n)
+    m_g = jnp.maximum(m_g, 1.0)
+    # lambda1_g = R(leader row of group g) = rowrange[g] (leader is row g).
+    # Floored relative to the leader's magnitude: a near-constant row
+    # (range ~ 0, values large) would otherwise blow up s1 and the f32
+    # cancellation error of the reflection scales with s1 * |x| (mirrors
+    # rust/src/quant/bhq.rs).
+    lam1 = jnp.maximum(jnp.maximum(rowrange, 1e-3 * mags), _EPS_RANGE)
+    # lambda2_g = 2 * max_{non-leader members} |row|_inf.
+    lam2 = jax.ops.segment_max(
+        jnp.where(is_leader, 0.0, mags), gid, num_segments=n
+    )
+    lam2 = jnp.maximum(2.0 * lam2, _EPS_RANGE)
+
+    denom = lam1 ** (2 / 3) * m_g ** (-1 / 3) + lam2 ** (2 / 3) * m_g ** (2 / 3)
+    denom = jnp.maximum(denom, _EPS_RANGE)
+    s1 = jnp.minimum(bins * lam1 ** (-1 / 3) * m_g ** (1 / 6) / denom, _MAX_SCALE)
+    s2 = jnp.minimum(bins * lam2 ** (-1 / 3) * m_g ** (1 / 6) / denom, _MAX_SCALE)
+    srow = jnp.where(is_leader, s1[gid], s2[gid])[:, None]
+
+    # n_g = 1_group / sqrt(m_g) - e_leader, stacked as columns of Nm.
+    member = (gid[:, None] == idx[None, :]).astype(jnp.float32)  # (row, g)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    nm = member / jnp.sqrt(m_g)[None, :] - eye
+    nsq = jnp.sum(nm * nm, axis=0)
+    # Only columns of *real* groups contribute a reflection: group g exists
+    # iff sorted row g is its own leader. Empty-group columns otherwise
+    # degenerate to -e_g and would overlap real groups' support, breaking
+    # blockwise orthogonality. Singleton groups have n = 0 -> identity.
+    valid = is_leader & (nsq > 1e-12)
+    inv_nsq = jnp.where(valid, 2.0 / jnp.maximum(nsq, 1e-12), 0.0)
+    q = eye - (nm * inv_nsq[None, :]) @ nm.T
+    return srow, q
+
+
+def bhq(x, key, bins):
+    """Block Householder quantizer (§4.2, App. D.4–D.5).
+
+    Pipeline: sort rows by |row|_inf desc -> build groups (D.5) -> rotate
+    with blockwise Householder Q and scale rows -> per-row zero-point ->
+    stochastic round (L1 kernel) -> inverse transform -> unsort.
+    Every step except SR is deterministic given x, so unbiasedness holds.
+    """
+    n, _ = x.shape
+    mags = jnp.max(jnp.abs(x), axis=1)
+    order = jnp.argsort(-mags)
+    inv_order = jnp.argsort(order)
+    xs = x[order]
+
+    gid, _ = bhq_groups(mags[order], n)
+    srow, q = _bhq_matrices(xs, gid, bins)
+
+    y = qmatmul(q, srow * xs)  # S X = Q diag(s) X  (two L1 GEMM passes)
+    zy = jnp.min(y, axis=1, keepdims=True)
+    ones = jnp.ones_like(srow)
+    u = jax.random.uniform(key, y.shape, jnp.float32)
+    _, yhat = sr_quant(y, ones, zy, u, bins)
+    xhat_s = qmatmul(q, yhat) / srow  # S^{-1} = diag(s)^{-1} Q (Q^2 = I)
+    return xhat_s[inv_order]
+
+
+# -- Extension formats (Table 2 comparison) ---------------------------------
+
+
+def fp8_sim(x, key, exp_bits=4, man_bits=3):
+    """FP8 (default E4M3) stochastic-rounding simulation, per-tensor scaled.
+
+    The tensor is scaled so its absmax hits the format's max normal, then
+    each element is stochastically rounded to the nearest representable
+    FP8 grid point (step = 2^(floor(log2|x|) - man_bits), subnormals get
+    the fixed step 2^(emin - man_bits)). Unbiased within range; values at
+    the top of the range saturate (same convention as HFP8 hardware).
+    """
+    bias = 2 ** (exp_bits - 1) - 1
+    emax = 2**exp_bits - 2 - bias  # reserve top exponent (E4M3 style)
+    emin = 1 - bias
+    max_normal = 2.0**emax * (2.0 - 2.0**-man_bits)
+
+    absmax = jnp.maximum(jnp.max(jnp.abs(x)), _EPS_RANGE)
+    s = max_normal / absmax
+    xs = x * s
+
+    ax = jnp.abs(xs)
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 2.0**emin * 2.0**-man_bits)))
+    e = jnp.clip(e, emin, emax)
+    step = jnp.exp2(e - man_bits)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    q = jnp.floor(xs / step + u) * step
+    # Unbiasedness needs floor on the *signed* grid: floor handles both
+    # signs correctly (grid is uniform within a binade).
+    q = jnp.clip(q, -max_normal, max_normal)
+    return q / s
+
+
+def bfp(x, key, bins, block=64):
+    """Block floating point (HBFP-style): shared exponent per block.
+
+    Rows are split into length-`block` chunks along the feature axis; each
+    chunk shares the exponent of its absmax and mantissas are
+    stochastically rounded to log2(bins+1)-1 fractional bits equivalent —
+    i.e. the chunk is affinely mapped to [-B/2, B/2] by a power-of-two
+    scale. Power-of-two scales are what make BFP hardware-cheap.
+    """
+    n, d = x.shape
+    pad = (-d) % block
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    nb = (d + pad) // block
+    xb = xp.reshape(n * nb, block)
+
+    absmax = jnp.maximum(jnp.max(jnp.abs(xb), axis=1, keepdims=True), _EPS_RANGE)
+    # power-of-two scale: largest 2^k with absmax * s <= bins/2
+    s = jnp.exp2(jnp.floor(jnp.log2((bins / 2.0) / absmax)))
+    s = jnp.minimum(s, _MAX_SCALE)
+    u = jax.random.uniform(key, xb.shape, jnp.float32)
+    q = jnp.floor(xb * s + u)
+    deq = (q / s).reshape(n, d + pad)[:, :d]
+    return deq
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + sample-view plumbing.
+# ---------------------------------------------------------------------------
+
+
+def quantize_grad(kind, g, key, bins, sample_count=None):
+    """Quantize an activation gradient with the named quantizer.
+
+    `g` is (M, C). The paper's quantizers act on the (N, D) per-*sample*
+    view of the gradient (N = batch samples); for convolutional layers M =
+    N * positions, so we reshape to (N, M/N*C), quantize, and reshape back
+    (DESIGN.md §2 "sample_rows"). PTQ is view-invariant; PSQ/BHQ are not.
+    """
+    m, c = g.shape
+    n = sample_count or m
+    view = g.reshape(n, (m // n) * c)
+    if kind == "ptq":
+        out = ptq_stoch(view, key, bins)
+    elif kind == "psq":
+        out = psq(view, key, bins)
+    elif kind == "bhq":
+        out = bhq(view, key, bins)
+    elif kind == "fp8":
+        out = fp8_sim(view, key)
+    elif kind == "bfp":
+        out = bfp(view, key, bins)
+    else:
+        raise ValueError(f"unknown gradient quantizer {kind!r}")
+    return out.reshape(m, c)
+
+
+# ---------------------------------------------------------------------------
+# Theoretical variance bounds (used by tests and the Fig-3 analysis).
+# ---------------------------------------------------------------------------
+
+
+def ptq_variance_bound(x, bins):
+    """Eq. (9): Var[Q_ptq(X)|X] <= N D / (4 B^2) * R(X)^2."""
+    n, d = x.shape
+    r = jnp.max(x) - jnp.min(x)
+    return n * d / (4.0 * bins**2) * r**2
+
+
+def psq_variance_bound(x, bins):
+    """§4.1: Var[Q_psq(X)|X] <= D / (4 B^2) * sum_i R(x_i)^2."""
+    d = x.shape[1]
+    r = jnp.max(x, axis=1) - jnp.min(x, axis=1)
+    return d / (4.0 * bins**2) * jnp.sum(r**2)
+
+
+def sr_exact_variance(t):
+    """Exact SR variance of an already-scaled tensor: sum p(1-p)."""
+    p = t - jnp.floor(t)
+    return jnp.sum(p * (1.0 - p))

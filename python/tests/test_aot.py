@@ -1,0 +1,98 @@
+# AOT pipeline: the HLO-text interchange contract the Rust runtime
+# depends on. Lowers the smallest artifact in-process and validates the
+# text, metadata, and parameter pruning behaviour (keep_unused).
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def lowered_mlp_exact():
+    bm = M.build("mlp", "exact")
+    lowered, args = M.lower_step(bm, "train")
+    return bm, lowered, args
+
+
+class TestLowering:
+    def test_hlo_text_parses_as_hlo(self, lowered_mlp_exact):
+        _, lowered, _ = lowered_mlp_exact
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_all_abi_params_survive_lowering(self, lowered_mlp_exact):
+        """keep_unused contract: exact ignores seed/bits but the HLO must
+        still declare all 7 parameters (regression for the 7-vs-5 buffer
+        mismatch the Rust runtime hit)."""
+        _, lowered, args = lowered_mlp_exact
+        text = aot.to_hlo_text(lowered)
+        entry = [l for l in text.splitlines() if "ENTRY" in l][0]
+        n_params = entry.count("parameter") or entry.count("f32[")
+        # count parameter declarations in the entry computation body
+        body_params = [
+            l for l in text.splitlines() if "= parameter(" in l or " parameter(" in l
+        ]
+        assert len(body_params) >= len(args), (len(body_params), len(args))
+
+    def test_artifact_plan_contents(self):
+        plan = aot.artifact_plan("mlp")
+        variants = {v for v, _ in plan}
+        steps = {s for _, s in plan}
+        assert {"exact", "qat", "ptq", "psq", "bhq"} <= variants
+        assert steps == {"train", "probe", "eval", "actgrad"}
+        # extension formats only for cnn
+        assert "fp8" not in variants
+        assert {"fp8", "bfp"} <= {v for v, _ in aot.artifact_plan("cnn")}
+
+    def test_spec_meta_shapes(self):
+        s = jax.ShapeDtypeStruct((3, 4), np.float32)
+        m = aot._spec_meta(s)
+        assert m == {"shape": [3, 4], "dtype": "float32"}
+
+
+class TestArtifactsOnDisk:
+    """Validate the artifacts directory if `make artifacts` has run."""
+
+    @pytest.fixture(scope="class")
+    def adir(self):
+        d = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        if not os.path.exists(os.path.join(d, "manifest.json")):
+            pytest.skip("artifacts not built")
+        return d
+
+    def test_manifest_lists_existing_files(self, adir):
+        with open(os.path.join(adir, "manifest.json")) as f:
+            manifest = json.load(f)
+        for name in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(adir, f"{name}.hlo.txt")), name
+            assert os.path.exists(os.path.join(adir, f"{name}.json")), name
+        for model, info in manifest["models"].items():
+            init = os.path.join(adir, info["init"])
+            assert os.path.getsize(init) == 4 * info["n_params"]
+
+    def test_sidecar_abi_consistency(self, adir):
+        with open(os.path.join(adir, "mlp_ptq_train.json")) as f:
+            meta = json.load(f)
+        assert meta["model"] == "mlp"
+        assert len(meta["inputs"]) == 7  # p, m, x, y, seed, lr, bits
+        assert len(meta["outputs"]) == 4  # p', m', loss, acc
+        assert meta["inputs"][0]["shape"] == [meta["n_params"]]
+        assert meta["inputs"][4]["shape"] == []  # seed scalar
+
+    def test_probe_abi(self, adir):
+        with open(os.path.join(adir, "mlp_bhq_probe.json")) as f:
+            meta = json.load(f)
+        assert len(meta["inputs"]) == 5
+        assert meta["outputs"][1]["shape"] == [meta["n_params"]]
+
+    def test_init_params_finite_and_scaled(self, adir):
+        p = np.fromfile(os.path.join(adir, "mlp_init.bin"), dtype="<f4")
+        assert np.isfinite(p).all()
+        assert 0.01 < np.abs(p).max() < 10.0

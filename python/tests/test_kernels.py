@@ -1,0 +1,182 @@
+# L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+#
+# This is the CORE correctness signal for the kernel layer: hypothesis
+# sweeps shapes/scales and asserts exact (or allclose) agreement between
+# the fused kernels and ref.py. The same noise tensor feeds both sides, so
+# the stochastic kernel is compared deterministically.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qmatmul, rn_quant, sr_quant
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=65)
+small_dims = st.integers(min_value=1, max_value=17)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestSrQuant:
+    @settings(max_examples=25, deadline=None)
+    @given(n=dims, d=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_exactly(self, n, d, seed):
+        k = jax.random.PRNGKey(seed)
+        y = jax.random.normal(k, (n, d)) * 3.0
+        lo = jnp.min(y, axis=1, keepdims=True)
+        rng = jnp.maximum(jnp.max(y, axis=1, keepdims=True) - lo, 1e-20)
+        scale = 15.0 / rng
+        u = jax.random.uniform(jax.random.fold_in(k, 1), (n, d))
+        q_k, d_k = sr_quant(y, scale, lo, u, 15.0)
+        q_r, d_r = ref.sr_quant_ref(y, scale, lo, u, 15.0)
+        np.testing.assert_allclose(q_k, q_r, rtol=0, atol=0)
+        np.testing.assert_allclose(d_k, d_r, rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=dims,
+        d=dims,
+        br=st.sampled_from([1, 2, 8, 64]),
+        bc=st.sampled_from([1, 4, 32, 128]),
+    )
+    def test_block_shape_invariance(self, n, d, br, bc):
+        """Any legal tiling produces identical results (scheduling must
+        not change numerics)."""
+        y = rand(0, n, d)
+        scale = jnp.full((n, 1), 7.5, jnp.float32)
+        zero = jnp.full((n, 1), -1.0, jnp.float32)
+        u = jax.random.uniform(jax.random.PRNGKey(1), (n, d))
+        qa, da = sr_quant(y, scale, zero, u, 255.0)
+        qb, db = sr_quant(y, scale, zero, u, 255.0, block_rows=br, block_cols=bc)
+        np.testing.assert_array_equal(np.asarray(qa), np.asarray(qb))
+        np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+    def test_codes_integer_in_range(self):
+        y = rand(3, 32, 48) * 10
+        lo = jnp.min(y, axis=1, keepdims=True)
+        rng = jnp.maximum(jnp.max(y, axis=1, keepdims=True) - lo, 1e-20)
+        scale = 31.0 / rng
+        u = jax.random.uniform(jax.random.PRNGKey(5), y.shape)
+        q, _ = sr_quant(y, scale, lo, u, 31.0)
+        q = np.asarray(q)
+        assert q.min() >= 0 and q.max() <= 31
+        np.testing.assert_array_equal(q, np.floor(q))
+
+    def test_traced_nbins_scalar(self):
+        """bits is a runtime input in the artifacts: nbins must trace."""
+
+        @jax.jit
+        def f(y, u, nb):
+            s = jnp.ones((y.shape[0], 1))
+            z = jnp.zeros((y.shape[0], 1))
+            return sr_quant(y, s, z, u, nb)
+
+        y = jnp.abs(rand(7, 8, 8)) * 5
+        u = jax.random.uniform(jax.random.PRNGKey(8), y.shape)
+        q3, _ = f(y, u, 7.0)
+        q8, _ = f(y, u, 255.0)
+        assert np.asarray(q3).max() <= 7
+        assert np.asarray(q8).max() <= 255
+
+    def test_unbiased_statistically(self):
+        y = rand(11, 4, 16) * 2
+        lo = jnp.min(y, axis=1, keepdims=True)
+        scale = 15.0 / jnp.maximum(jnp.max(y, axis=1, keepdims=True) - lo, 1e-20)
+        reps = 800
+        acc = jnp.zeros_like(y)
+        for i in range(reps):
+            u = jax.random.uniform(jax.random.PRNGKey(i), y.shape)
+            _, d = sr_quant(y, scale, lo, u, 15.0)
+            acc = acc + d
+        err = jnp.abs(acc / reps - y).max()
+        # bin size ~ R/15, SE of mean ~ bin/sqrt(12*reps) ~ 0.003*R
+        assert err < 0.05, err
+
+
+class TestRnQuant:
+    @settings(max_examples=20, deadline=None)
+    @given(n=dims, d=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, d, seed):
+        y = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+        scale = jnp.full((n, 1), 20.0, jnp.float32)
+        zero = jnp.full((n, 1), -2.0, jnp.float32)
+        q_k, d_k = rn_quant(y, scale, zero, 255.0)
+        q_r, d_r = ref.rn_quant_ref(y, scale, zero, 255.0)
+        np.testing.assert_allclose(q_k, q_r, atol=0)
+        np.testing.assert_allclose(d_k, d_r, rtol=1e-6, atol=1e-6)
+
+    def test_deterministic(self):
+        y = rand(2, 16, 16)
+        s = jnp.ones((16, 1)) * 5
+        z = jnp.zeros((16, 1))
+        a = rn_quant(y, s, z, 15.0)
+        b = rn_quant(y, s, z, 15.0)
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+class TestQmatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 1000))
+    def test_matches_ref(self, m, k, n, seed):
+        a = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n))
+        got = qmatmul(a, b)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        bm=st.sampled_from([1, 2, 16, 64]),
+        bk=st.sampled_from([1, 8, 32]),
+        bn=st.sampled_from([1, 4, 64]),
+    )
+    def test_blocked_accumulation(self, bm, bk, bn):
+        """k-inner accumulation over many blocks stays exact-ish."""
+        a = rand(1, 64, 64)
+        b = rand(2, 64, 64)
+        got = qmatmul(a, b, bm=bm, bk=bk, bn=bn)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_ragged_dims_fall_back_to_divisors(self):
+        """288 = 2^5*9: block picker must tile exactly (interpret mode
+        NaN-fills out-of-bounds reads; a ragged tile would poison the
+        accumulation — regression test for the CNN stage-2 NaN)."""
+        a = rand(4, 96, 288)
+        b = rand(5, 288, 33)
+        got = qmatmul(a, b, bm=2048, bk=512, bn=512)
+        assert not bool(jnp.isnan(got).any())
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_prime_dims(self):
+        a = rand(6, 127, 131)
+        b = rand(7, 131, 113)
+        got = qmatmul(a, b)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_transpose_helpers(self):
+        from compile.kernels import qmatmul_nt, qmatmul_tn
+
+        a = rand(8, 32, 16)
+        g = rand(9, 32, 24)
+        np.testing.assert_allclose(
+            qmatmul_tn(a, g), ref.matmul_ref(a.T, g), rtol=1e-4, atol=1e-4
+        )
+        b = rand(10, 24, 16)
+        np.testing.assert_allclose(
+            qmatmul_nt(g, b.T), ref.matmul_ref(g, b), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestRowStats:
+    def test_rowstats_ref_shapes(self):
+        x = rand(20, 6, 9)
+        lo, hi = ref.rowstats_ref(x)
+        assert lo.shape == (6, 1) and hi.shape == (6, 1)
+        assert bool((hi >= lo).all())

@@ -1,0 +1,163 @@
+# FQT backward correctness: the custom_vjp qlinear must implement
+# Eq. (4) (QAT) and Eq. (6) (FQT with bifurcation) exactly, and Theorem 1
+# (E[FQT grad | batch] = QAT grad) must hold statistically end to end.
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quantizers as Q
+from compile.layers import LayerIds, make_qidentity, make_qlinear
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestExactVariant:
+    def test_forward_is_plain_matmul(self):
+        qlin = make_qlinear(0, Q.QuantConfig(kind="exact"))
+        h, w = rand(0, 8, 16), rand(1, 16, 4)
+        np.testing.assert_allclose(
+            qlin(h, w, 0.0, 8.0), h @ w, rtol=1e-4, atol=1e-5
+        )
+
+    def test_gradients_match_autodiff(self):
+        qlin = make_qlinear(0, Q.QuantConfig(kind="exact"))
+        h, w = rand(2, 6, 10), rand(3, 10, 3)
+
+        def f_q(h, w):
+            return jnp.sum(jnp.sin(qlin(h, w, 0.0, 8.0)))
+
+        def f_ref(h, w):
+            return jnp.sum(jnp.sin(h @ w))
+
+        gq = jax.grad(f_q, argnums=(0, 1))(h, w)
+        gr = jax.grad(f_ref, argnums=(0, 1))(h, w)
+        for a, b in zip(gq, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+class TestQATVariant:
+    def test_forward_quantized_backward_ste(self):
+        """QAT: out = Q(h) @ Q(w); grads = g @ Q(w)^T, Q(h)^T @ g (STE)."""
+        qcfg = Q.QuantConfig(kind="qat")
+        qlin = make_qlinear(0, qcfg)
+        h, w = rand(4, 5, 8), rand(5, 8, 3)
+        ht = Q.ptq_det(h, 255.0)
+        wt = Q.ptq_det(w, 255.0)
+        out = qlin(h, w, 0.0, 8.0)
+        np.testing.assert_allclose(out, ht @ wt, rtol=1e-4, atol=1e-5)
+
+        g = rand(6, 5, 3)
+        dh, dw = jax.vjp(lambda h, w: qlin(h, w, 0.0, 8.0), h, w)[1](g)[:2]
+        np.testing.assert_allclose(dh, g @ wt.T, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dw, ht.T @ g, rtol=1e-4, atol=1e-5)
+
+
+class TestFQTVariant:
+    def test_backward_matches_eq6_with_same_keys(self):
+        """Reconstruct Eq. (6) by hand with the layer's PRNG convention and
+        compare bit-for-bit with the custom_vjp backward."""
+        layer_id = 7
+        qcfg = Q.QuantConfig(kind="psq")
+        qlin = make_qlinear(layer_id, qcfg)
+        h, w = rand(7, 6, 12), rand(8, 12, 4)
+        g = rand(9, 6, 4)
+        seed, bits = 42.0, 5.0
+
+        _, vjp = jax.vjp(lambda h, w: qlin(h, w, seed, bits), h, w)
+        dh, dw = vjp(g)[:2]
+
+        # hand-rolled Eq. (6)
+        base = jax.random.PRNGKey(jnp.asarray(seed).astype(jnp.uint32))
+        kl = jax.random.fold_in(base, layer_id)
+        k1 = jax.random.fold_in(kl, 1)
+        k2 = jax.random.fold_in(kl, 2)
+        ht, wt = Q.ptq_det(h, 255.0), Q.ptq_det(w, 255.0)
+        g1 = Q.ptq_stoch(g, k1, 255.0)
+        g2 = Q.psq(g, k2, Q.nbins(bits))
+        np.testing.assert_allclose(dw, ht.T @ g1, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dh, g2 @ wt.T, rtol=1e-4, atol=1e-5)
+
+    def test_seed_and_bits_get_zero_cotangent(self):
+        qlin = make_qlinear(0, Q.QuantConfig(kind="ptq"))
+        h, w = rand(10, 4, 6), rand(11, 6, 2)
+
+        def f(h, w, seed, bits):
+            return jnp.sum(qlin(h, w, seed, bits))
+
+        ds, db = jax.grad(f, argnums=(2, 3))(h, w, 1.0, 5.0)
+        assert float(ds) == 0.0 and float(db) == 0.0
+
+    def test_different_seeds_different_noise(self):
+        qlin = make_qlinear(0, Q.QuantConfig(kind="ptq"))
+        h, w = rand(12, 4, 6), rand(13, 6, 2)
+        g = rand(14, 4, 2)
+
+        def bwd(seed):
+            _, vjp = jax.vjp(lambda h, w: qlin(h, w, seed, 3.0), h, w)
+            return vjp(g)[0]
+
+        assert not np.allclose(bwd(1.0), bwd(2.0))
+        np.testing.assert_array_equal(np.asarray(bwd(5.0)), np.asarray(bwd(5.0)))
+
+    def test_theorem1_unbiased_through_two_layers(self):
+        """E[FQT grad | batch] == QAT grad through a stacked network —
+        the end-to-end statement of Theorem 1 (statistical)."""
+        qcfg_fqt = Q.QuantConfig(kind="ptq")
+        qcfg_qat = Q.QuantConfig(kind="qat")
+        w1, w2 = rand(15, 8, 16), rand(16, 16, 4)
+        x = rand(17, 12, 8)
+        y = jax.nn.one_hot(jnp.arange(12) % 4, 4)
+
+        def loss(variant_cfg, seed):
+            l1 = make_qlinear(0, variant_cfg)
+            l2 = make_qlinear(1, variant_cfg)
+
+            def f(w1, w2):
+                h = jnp.maximum(l1(x, w1, seed, 4.0), 0.0)
+                o = l2(h, w2, seed, 4.0)
+                return -jnp.mean(jnp.sum(jax.nn.log_softmax(o) * y, -1))
+
+            return jax.grad(f, argnums=(0, 1))(w1, w2)
+
+        g_qat = loss(qcfg_qat, 0.0)
+        reps = 300
+        acc = [jnp.zeros_like(w1), jnp.zeros_like(w2)]
+        f_fqt = jax.jit(lambda s: loss(qcfg_fqt, s))
+        for i in range(reps):
+            g = f_fqt(float(i) + 1.0)
+            acc = [a + gi for a, gi in zip(acc, g)]
+        for a, gq in zip(acc, g_qat):
+            mean = a / reps
+            # normalize by gradient scale
+            denom = float(jnp.abs(gq).max()) + 1e-8
+            rel = float(jnp.abs(mean - gq).max()) / denom
+            assert rel < 0.25, rel
+
+
+class TestQIdentity:
+    def test_forward_quantizes_backward_quantizes(self):
+        qcfg = Q.QuantConfig(kind="ptq")
+        qid = make_qidentity(3, qcfg, sample_count=4)
+        x = rand(18, 4, 6)
+        out = qid(x, 0.0, 8.0)
+        np.testing.assert_allclose(out, Q.ptq_det(x, 255.0), atol=1e-6)
+
+        g = rand(19, 4, 6)
+        _, vjp = jax.vjp(lambda x: qid(x, 7.0, 4.0), x)
+        (dx,) = vjp(g)
+        assert dx.shape == x.shape
+        # quantized: values differ from g but are close at 4 bits scale
+        assert not np.allclose(np.asarray(dx), np.asarray(g))
+
+    def test_exact_is_noop(self):
+        qid = make_qidentity(0, Q.QuantConfig(kind="exact"))
+        x = rand(20, 3, 5)
+        np.testing.assert_array_equal(np.asarray(qid(x, 0.0, 8.0)), np.asarray(x))
+
+    def test_layer_ids_monotone(self):
+        ids = LayerIds()
+        assert [ids.fresh() for _ in range(4)] == [0, 1, 2, 3]

@@ -1,0 +1,158 @@
+# Model-zoo correctness: shapes, finiteness, variant equivalences, and
+# learning on the smallest configurations (kept fast — the heavy
+# end-to-end checks live in rust/tests/integration.rs over the artifacts).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import quantizers as Q
+from compile.models import cnn, mlp, transformer
+from compile.models.common import batchnorm, cross_entropy, im2col, layernorm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestCommon:
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((4, 10))
+        y = jnp.asarray([0, 3, 5, 9])
+        loss, acc = cross_entropy(logits, y)
+        assert abs(float(loss) - np.log(10)) < 1e-5
+        assert 0.0 <= float(acc) <= 1.0
+
+    def test_cross_entropy_perfect(self):
+        y = jnp.asarray([0, 1])
+        logits = jax.nn.one_hot(y, 3) * 100.0
+        loss, acc = cross_entropy(logits, y)
+        assert float(loss) < 1e-3
+        assert float(acc) == 1.0
+
+    def test_im2col_matches_conv(self):
+        """im2col + GEMM == lax.conv for a random case."""
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (2, 8, 8, 3))
+        w = jax.random.normal(jax.random.fold_in(k, 1), (3, 3, 3, 5))
+        patches, (oh, ow) = im2col(x, 3, 3, 1, 1)
+        # weight layout: rows iterate (i, j, c) in the same order as im2col
+        wmat = w.reshape(9 * 3, 5)
+        got = (patches @ wmat).reshape(2, oh, ow, 5)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_im2col_stride_shapes(self):
+        x = jnp.zeros((4, 16, 16, 8))
+        p, (oh, ow) = im2col(x, 3, 3, 2, 1)
+        assert (oh, ow) == (8, 8)
+        assert p.shape == (4 * 64, 9 * 8)
+
+    def test_batchnorm_normalizes(self):
+        k = jax.random.PRNGKey(2)
+        x = jax.random.normal(k, (8, 4, 4, 3)) * 5 + 2
+        params = {"gamma": jnp.ones((3,)), "beta": jnp.zeros((3,))}
+        y = batchnorm(params, x)
+        assert float(jnp.abs(jnp.mean(y, axis=(0, 1, 2))).max()) < 1e-4
+        assert float(jnp.abs(jnp.var(y, axis=(0, 1, 2)) - 1.0).max()) < 1e-2
+
+    def test_layernorm_shape_and_stats(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 8))
+        params = {"gamma": jnp.ones((8,)), "beta": jnp.zeros((8,))}
+        y = layernorm(params, x)
+        assert y.shape == x.shape
+        assert float(jnp.abs(jnp.mean(y, -1)).max()) < 1e-4
+
+
+class TestZoo:
+    @pytest.mark.parametrize("name", ["mlp", "cnn", "transformer"])
+    def test_logits_shape_and_finite(self, name):
+        bm = M.build(name, "qat")
+        rng = np.random.default_rng(0)
+        if bm.cfg.input_dtype == "f32":
+            x = jnp.asarray(rng.normal(size=bm.cfg.input_shape), jnp.float32)
+        else:
+            x = jnp.asarray(rng.integers(0, 256, bm.cfg.input_shape), jnp.int32)
+        params = bm.unravel(jnp.asarray(bm.params0_flat))
+        logits = bm.mod.apply(params, x, 0.0, 8.0, bm.qcfg, bm.cfg)
+        if name == "transformer":
+            assert logits.shape == (*bm.cfg.input_shape, bm.cfg.vocab)
+        else:
+            assert logits.shape == (bm.cfg.input_shape[0], 10)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_param_counts_stable(self):
+        """Flat-vector ABI contract: param count is deterministic."""
+        assert M.build("mlp", "ptq").n_params == M.build("mlp", "bhq").n_params
+        assert M.build("mlp", "ptq").n_params == 26122
+
+    def test_variants_share_init(self):
+        a = M.build("cnn", "ptq", seed=3)
+        b = M.build("cnn", "bhq", seed=3)
+        np.testing.assert_array_equal(a.params0_flat, b.params0_flat)
+        c = M.build("cnn", "ptq", seed=4)
+        assert not np.array_equal(a.params0_flat, c.params0_flat)
+
+    def test_probe_shapes_consistent(self):
+        for name in ["mlp", "cnn", "transformer"]:
+            bm = M.build(name, "qat")
+            shape = bm.mod.probe_shape(bm.cfg)
+            assert shape[0] == bm.cfg.input_shape[0]
+            assert np.prod(shape) > 0
+
+
+class TestTrainStep:
+    def test_mlp_learns_fast(self):
+        """30 FQT steps on separable data must drop the loss sharply."""
+        bm = M.build("mlp", "psq")
+        step = jax.jit(M.make_train_step(bm))
+        rng = np.random.default_rng(0)
+        # two separable gaussian blobs over 10 classes
+        protos = rng.normal(size=(10, 64)).astype(np.float32)
+        y = rng.integers(0, 10, 64).astype(np.int32)
+        x = (protos[y] + 0.3 * rng.normal(size=(64, 64))).astype(np.float32)
+        p = jnp.asarray(bm.params0_flat)
+        m = jnp.zeros_like(p)
+        first = None
+        for i in range(30):
+            p, m, loss, _ = step(p, m, x, y, float(i), 0.1, 5.0)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first * 0.3, (first, float(loss))
+
+    def test_exact_train_step_deterministic(self):
+        bm = M.build("mlp", "exact")
+        step = jax.jit(M.make_train_step(bm), keep_unused=True)
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(64, 64)).astype(np.float32)
+        y = rng.integers(0, 10, 64).astype(np.int32)
+        p = jnp.asarray(bm.params0_flat)
+        m = jnp.zeros_like(p)
+        o1 = step(p, m, x, y, 1.0, 0.1, 5.0)
+        o2 = step(p, m, x, y, 2.0, 0.1, 5.0)  # seed unused for exact
+        np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+
+    def test_probe_step_grad_matches_train_direction(self):
+        """probe grad == the momentum delta of a zero-momentum train step."""
+        bm = M.build("mlp", "qat")
+        train = jax.jit(M.make_train_step(bm), keep_unused=True)
+        probe = jax.jit(M.make_probe_step(bm), keep_unused=True)
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(64, 64)).astype(np.float32)
+        y = rng.integers(0, 10, 64).astype(np.int32)
+        p = jnp.asarray(bm.params0_flat)
+        m = jnp.zeros_like(p)
+        _, m1, _, _ = train(p, m, x, y, 0.0, 0.1, 8.0)
+        _, g = probe(p, x, y, 0.0, 8.0)
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(g), rtol=1e-5, atol=1e-6)
+
+    def test_actgrad_nonzero_and_shaped(self):
+        bm = M.build("mlp", "qat")
+        act = jax.jit(M.make_actgrad_step(bm), keep_unused=True)
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(64, 64)).astype(np.float32)
+        y = rng.integers(0, 10, 64).astype(np.int32)
+        g = act(jnp.asarray(bm.params0_flat), x, y, 0.0)
+        assert g.shape == (64, 128)
+        assert bool(jnp.any(g != 0))

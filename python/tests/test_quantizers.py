@@ -1,0 +1,226 @@
+# L2 quantizer properties: unbiasedness (Thm 1's requirement on Q_b),
+# the paper's variance bounds (Eq. 9, §4.1, §4.2), BHQ group construction
+# invariants (App. D.5), and the extension formats.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantizers as Q
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def outlier_matrix(key, n, d, big=10.0, small=0.01):
+    """One huge row + tiny rest — the §4.2 gradient structure."""
+    x = jax.random.normal(jax.random.PRNGKey(key), (n, d))
+    scales = jnp.concatenate(
+        [jnp.full((1, 1), big), jnp.full((n - 1, 1), small)], axis=0
+    )
+    return x * scales
+
+
+def empirical_var(fn, x, reps=200):
+    tot = 0.0
+    for i in range(reps):
+        out = fn(x, jax.random.PRNGKey(i))
+        tot += float(jnp.sum((out - x) ** 2))
+    return tot / reps
+
+
+def empirical_bias(fn, x, reps=400):
+    acc = jnp.zeros_like(x)
+    for i in range(reps):
+        acc = acc + fn(x, jax.random.PRNGKey(i))
+    return float(jnp.abs(acc / reps - x).max())
+
+
+BITS4 = Q.nbins(4.0)
+
+
+class TestPTQ:
+    def test_unbiased(self):
+        x = outlier_matrix(0, 8, 16)
+        f = jax.jit(lambda x, k: Q.ptq_stoch(x, k, BITS4))
+        assert empirical_bias(f, x) < 0.35  # bin ~ R/15 ~ 2.7; SE ~ bin/sqrt(12*400)
+
+    def test_variance_below_bound(self):
+        x = outlier_matrix(1, 8, 16)
+        f = jax.jit(lambda x, k: Q.ptq_stoch(x, k, BITS4))
+        v = empirical_var(f, x)
+        assert v <= float(Q.ptq_variance_bound(x, BITS4))
+
+    def test_values_on_grid(self):
+        x = outlier_matrix(2, 4, 8)
+        out = Q.ptq_stoch(x, jax.random.PRNGKey(0), BITS4)
+        lo = jnp.min(x)
+        s = BITS4 / (jnp.max(x) - lo)
+        codes = np.asarray((out - lo) * s)
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+    def test_det_forward_idempotent(self):
+        x = outlier_matrix(3, 4, 8)
+        a = Q.ptq_det(x, 255.0)
+        b = Q.ptq_det(a, 255.0)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+class TestPSQ:
+    def test_unbiased(self):
+        x = outlier_matrix(4, 8, 16)
+        f = jax.jit(lambda x, k: Q.psq(x, k, BITS4))
+        assert empirical_bias(f, x) < 0.35
+
+    def test_variance_below_bound_and_below_ptq(self):
+        x = outlier_matrix(5, 12, 16)
+        fp = jax.jit(lambda x, k: Q.ptq_stoch(x, k, BITS4))
+        fs = jax.jit(lambda x, k: Q.psq(x, k, BITS4))
+        vp, vs = empirical_var(fp, x), empirical_var(fs, x)
+        assert vs <= float(Q.psq_variance_bound(x, BITS4)) * 1.05
+        assert vs < vp / 3.0, (vs, vp)
+
+    def test_tiny_rows_near_exact(self):
+        """Correctly-classified samples (range ~ 0) are reproduced almost
+        exactly — the §4.1 motivation."""
+        x = outlier_matrix(6, 8, 32, big=5.0, small=1e-4)
+        out = Q.psq(x, jax.random.PRNGKey(0), BITS4)
+        err_small = float(jnp.abs(out[1:] - x[1:]).max())
+        # per-row bin = R(row)/B; rows are N(0, small^2) so R ~ 4-5*small
+        row_ranges = jnp.max(x[1:], axis=1) - jnp.min(x[1:], axis=1)
+        assert err_small <= float(row_ranges.max()) / 15 * 1.01
+
+
+class TestBHQGroups:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([2, 4, 8, 16, 64]), seed=st.integers(0, 10**6))
+    def test_partition(self, n, seed):
+        mags = jnp.sort(
+            jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+        )[::-1]
+        gid, g = Q.bhq_groups(mags, n)
+        gid = np.asarray(gid)
+        g = int(g)
+        assert 1 <= g <= n
+        # leaders own their id; members point at a valid leader
+        for i in range(n):
+            if i < g:
+                assert gid[i] == i
+            else:
+                assert 0 <= gid[i] < g
+
+    def test_single_outlier_prefers_one_group(self):
+        mags = jnp.asarray([10.0] + [0.001] * 31)
+        _, g = Q.bhq_groups(mags, 32)
+        assert int(g) == 1
+
+    def test_two_outliers_prefer_two_groups(self):
+        mags = jnp.asarray([10.0, 9.5] + [0.001] * 30)
+        _, g = Q.bhq_groups(mags, 32)
+        assert int(g) == 2
+
+
+class TestBHQ:
+    def test_householder_orthogonal_symmetric(self):
+        x = outlier_matrix(7, 16, 8)
+        mags = jnp.max(jnp.abs(x), axis=1)
+        order = jnp.argsort(-mags)
+        gid, _ = Q.bhq_groups(mags[order], 16)
+        _, q = Q._bhq_matrices(x[order], gid, BITS4)
+        eye = jnp.eye(16)
+        assert float(jnp.abs(q @ q - eye).max()) < 1e-5  # involution
+        assert float(jnp.abs(q - q.T).max()) < 1e-6  # symmetric
+
+    def test_unbiased(self):
+        x = outlier_matrix(8, 8, 16)
+        f = jax.jit(lambda x, k: Q.bhq(x, k, BITS4))
+        assert empirical_bias(f, x) < 0.4
+
+    def test_beats_psq_on_outlier(self):
+        x = outlier_matrix(9, 16, 32, big=10.0, small=0.001)
+        fb = jax.jit(lambda x, k: Q.bhq(x, k, BITS4))
+        fs = jax.jit(lambda x, k: Q.psq(x, k, BITS4))
+        vb, vs = empirical_var(fb, x), empirical_var(fs, x)
+        assert vb < vs / 2.0, (vb, vs)
+
+    def test_range_constraint_after_transform(self):
+        """R(S X) <= B (problem 12's constraint) for the chosen scales."""
+        x = outlier_matrix(10, 16, 8)
+        mags = jnp.max(jnp.abs(x), axis=1)
+        order = jnp.argsort(-mags)
+        xs = x[order]
+        gid, _ = Q.bhq_groups(mags[order], 16)
+        srow, q = Q._bhq_matrices(xs, gid, BITS4)
+        y = q @ (srow * xs)
+        rr = float((jnp.max(y, axis=1) - jnp.min(y, axis=1)).max())
+        assert rr <= float(BITS4) * 1.01, rr
+
+    def test_identity_on_uniform_high_bits(self):
+        x = jax.random.normal(jax.random.PRNGKey(11), (8, 8))
+        out = Q.bhq(x, jax.random.PRNGKey(0), Q.nbins(8.0))
+        rel = float(jnp.sum((out - x) ** 2) / jnp.sum(x**2))
+        assert rel < 1e-3
+
+
+class TestExtensionFormats:
+    def test_fp8_unbiased_and_finite(self):
+        x = outlier_matrix(12, 4, 16, big=2.0, small=0.3)
+        f = jax.jit(lambda x, k: Q.fp8_sim(x, k))
+        assert empirical_bias(f, x, reps=600) < 0.05
+        out = f(x, jax.random.PRNGKey(0))
+        assert bool(jnp.isfinite(out).all())
+
+    def test_bfp_unbiased(self):
+        x = outlier_matrix(13, 4, 96, big=1.0, small=0.5)
+        f = jax.jit(lambda x, k: Q.bfp(x, k, Q.nbins(8.0)))
+        assert empirical_bias(f, x, reps=600) < 0.02
+
+    def test_bfp_ragged_blocks(self):
+        x = jax.random.normal(jax.random.PRNGKey(14), (3, 70))
+        out = Q.bfp(x, jax.random.PRNGKey(0), Q.nbins(8.0), block=32)
+        assert out.shape == x.shape
+        assert bool(jnp.isfinite(out).all())
+
+
+class TestDispatch:
+    @settings(max_examples=10, deadline=None)
+    @given(kind=st.sampled_from(Q.GRAD_QUANTIZERS))
+    def test_shape_preserved(self, kind):
+        g = jax.random.normal(jax.random.PRNGKey(15), (24, 10))
+        out = Q.quantize_grad(kind, g, jax.random.PRNGKey(0), Q.nbins(6.0))
+        assert out.shape == g.shape
+
+    def test_sample_view_reshape(self):
+        """Conv gradients: (N*positions, C) quantized in the (N, D) view."""
+        g = jax.random.normal(jax.random.PRNGKey(16), (32, 10))  # N=8, pos=4
+        out = Q.quantize_grad(
+            "psq", g, jax.random.PRNGKey(0), Q.nbins(6.0), sample_count=8
+        )
+        assert out.shape == g.shape
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            Q.quantize_grad(
+                "nope", jnp.zeros((2, 2)), jax.random.PRNGKey(0), 15.0
+            )
+
+
+class TestVarianceLaws:
+    def test_four_x_per_bit(self):
+        """Eq. 10 discussion: each fewer bit ~4x the variance."""
+        x = outlier_matrix(17, 8, 32, big=1.0, small=1.0)
+        vars_ = []
+        for bits in [4.0, 5.0, 6.0]:
+            f = jax.jit(lambda x, k, b=bits: Q.ptq_stoch(x, k, Q.nbins(b)))
+            vars_.append(empirical_var(f, x, reps=150))
+        for hi, lo in zip(vars_, vars_[1:]):
+            assert 2.5 < hi / lo < 6.0, vars_
+
+    def test_sr_exact_variance_formula(self):
+        t = jnp.asarray([[0.5, 0.25, 0.9, 3.0]])
+        want = 0.25 + 0.25 * 0.75 + 0.9 * 0.1 * 0 + 0  # p(1-p) terms
+        # recompute directly
+        p = t - jnp.floor(t)
+        want = float(jnp.sum(p * (1 - p)))
+        got = float(Q.sr_exact_variance(t))
+        assert abs(got - want) < 1e-6

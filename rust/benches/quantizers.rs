@@ -1,0 +1,101 @@
+//! Bench: quantizer overhead — reproduces the shape of the paper's §4.3
+//! overhead study ("computing the range takes 11ms for PTQ and 24ms for
+//! PSQ/BHQ; the Householder transform ... 21ms; vs 480ms convolution").
+//!
+//! We measure, on a conv-layer-sized gradient (the paper's N=128, C=64,
+//! H=W=56 flattened to the (N, D) sample view):
+//!   * range reduction per-tensor (PTQ) and per-row (PSQ/BHQ),
+//!   * the BHQ plan construction (App. D.5 heuristic — the "3us C++
+//!     routine" of the paper),
+//!   * the blockwise Householder transform (the 2ND-FLOPs transform),
+//!   * full quantize-dequantize for each quantizer,
+//!   * a same-shape f32 GEMM stand-in for the convolution it shadows.
+//!
+//! Claim to reproduce: total quantizer overhead is small relative to the
+//! GEMM, and BHQ's extra cost over PSQ is the transform only.
+//!
+//! Run: `cargo bench --bench quantizers` (BENCH_BUDGET_MS to tune).
+
+use statquant::quant::{bfp, bhq, fp8, nbins, psq, ptq, Mat};
+use statquant::util::bench::Bench;
+use statquant::util::rng::Pcg32;
+
+fn gradient(n: usize, d: usize) -> Mat {
+    // outlier-structured like a real late-training gradient
+    let mut rng = Pcg32::new(7, 1);
+    let mut m = Mat::zeros(n, d);
+    for i in 0..n {
+        let s = if i % 16 == 0 { 1.0 } else { 0.005 };
+        for v in m.row_mut(i) {
+            *v = rng.normal() * s;
+        }
+    }
+    m
+}
+
+fn main() {
+    // paper §4.3 layer: N=128 samples, D = C*H*W = 64*56*56 is 200k cols —
+    // too large for a tight bench loop; use D=16384 and also a small case.
+    let cases = [(128usize, 16_384usize), (32, 2_048)];
+    let mut b = Bench::new();
+    for (n, d) in cases {
+        let g = gradient(n, d);
+        let elems = (n * d) as f64;
+        let nb = nbins(8.0);
+
+        b.run(&format!("range/per-tensor {n}x{d}"), elems, || {
+            std::hint::black_box(g.minmax());
+        });
+        b.run(&format!("range/per-row {n}x{d}"), elems, || {
+            std::hint::black_box(g.row_minmax());
+        });
+        b.run(&format!("bhq/plan (D.5 heuristic) {n}x{d}"), n as f64, || {
+            std::hint::black_box(bhq::build_plan(&g));
+        });
+
+        let mut rng = Pcg32::new(3, 3);
+        b.run(&format!("quantize/ptq {n}x{d}"), elems, || {
+            std::hint::black_box(ptq::quantize(&g, nb, &mut rng));
+        });
+        let mut rng = Pcg32::new(3, 4);
+        b.run(&format!("quantize/psq {n}x{d}"), elems, || {
+            std::hint::black_box(psq::quantize(&g, nb, &mut rng));
+        });
+        let mut rng = Pcg32::new(3, 5);
+        b.run(&format!("quantize/bhq {n}x{d}"), elems, || {
+            std::hint::black_box(bhq::quantize(&g, nb, &mut rng));
+        });
+        let mut rng = Pcg32::new(3, 6);
+        b.run(&format!("quantize/fp8 {n}x{d}"), elems, || {
+            std::hint::black_box(fp8::quantize(&g, &mut rng));
+        });
+        let mut rng = Pcg32::new(3, 7);
+        b.run(&format!("quantize/bfp {n}x{d}"), elems, || {
+            std::hint::black_box(bfp::quantize(&g, nb, 64, &mut rng));
+        });
+
+        // the GEMM this quantization shadows: (n x d) @ (d x 64)
+        let k = 64usize;
+        let w: Vec<f32> = {
+            let mut rng = Pcg32::new(9, 9);
+            (0..d * k).map(|_| rng.normal() * 0.05).collect()
+        };
+        let flops = 2.0 * (n * d * k) as f64;
+        b.run(&format!("gemm/f32 {n}x{d}x{k} (shadowed conv)"), flops, || {
+            let mut out = vec![0.0f32; n * k];
+            for i in 0..n {
+                let row = g.row(i);
+                for (kk, &x) in row.iter().enumerate() {
+                    let wrow = &w[kk * k..(kk + 1) * k];
+                    let orow = &mut out[i * k..(i + 1) * k];
+                    for (o, &ww) in orow.iter_mut().zip(wrow) {
+                        *o += x * ww;
+                    }
+                }
+            }
+            std::hint::black_box(out);
+        });
+    }
+    b.write_csv("quantizers").expect("csv");
+    println!("\nwrote results/bench/quantizers.csv");
+}

@@ -1,0 +1,88 @@
+//! Bench: end-to-end train-step latency per (model, variant) — the L3
+//! hot path (Table-1's cost axis, and the §Perf baseline for the
+//! optimization log in EXPERIMENTS.md).
+//!
+//! Measures a full coordinator step: batch synthesis + PJRT execute of
+//! the fused fwd+bwd+update artifact + state swap, and separately the
+//! eval step and data generation, to localize where time goes.
+//!
+//! Requires `make artifacts`. Models/variants chosen to finish quickly;
+//! override with BENCH_MODELS="mlp,cnn" BENCH_VARIANTS="qat,bhq".
+//!
+//! Run: `cargo bench --bench train_step`
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::Trainer;
+use statquant::data::Dataset;
+use statquant::runtime::{Registry, Runtime};
+use statquant::util::bench::Bench;
+
+fn main() {
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping train_step bench: {e}");
+            return;
+        }
+    };
+    let reg = match Registry::open("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping train_step bench (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let models = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "mlp,cnn,transformer".into());
+    let variants = std::env::var("BENCH_VARIANTS").unwrap_or_else(|_| "exact,qat,ptq,psq,bhq".into());
+
+    let mut b = Bench::new();
+    for model in models.split(',') {
+        // data generation cost (off the executor path)
+        {
+            let mut cfg = TrainConfig::default();
+            cfg.model = model.into();
+            cfg.variant = "qat".into();
+            if let Ok(tr) = Trainer::new(&rt, &reg, cfg) {
+                let ds: &dyn Dataset = tr.dataset.as_ref();
+                let mut step = 0u64;
+                b.run(&format!("data/batch {model}"), 1.0, || {
+                    std::hint::black_box(ds.batch(step));
+                    step += 1;
+                });
+            }
+        }
+        for variant in variants.split(',') {
+            let mut cfg = TrainConfig::default();
+            cfg.model = model.into();
+            cfg.variant = variant.into();
+            cfg.bits = 5.0;
+            cfg.steps = 1;
+            cfg.out_dir = "results/bench_runs".into();
+            let mut tr = match Trainer::new(&rt, &reg, cfg) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("skip {model}/{variant}: {e}");
+                    continue;
+                }
+            };
+            let batch_elems = tr.train_exec.meta.input_shape.iter().product::<usize>() as f64;
+            let mut step = 0u64;
+            b.run(&format!("train_step/{model}/{variant}"), batch_elems, || {
+                tr.train_step_bench(step).expect("step");
+                step += 1;
+            });
+        }
+        // eval step
+        let mut cfg = TrainConfig::default();
+        cfg.model = model.into();
+        cfg.variant = "qat".into();
+        cfg.out_dir = "results/bench_runs".into();
+        if let Ok(tr) = Trainer::new(&rt, &reg, cfg) {
+            b.run(&format!("eval_step/{model}"), 1.0, || {
+                std::hint::black_box(tr.evaluate(1).expect("eval"));
+            });
+        }
+    }
+    b.write_csv("train_step").expect("csv");
+    println!("\nwrote results/bench/train_step.csv");
+}

@@ -1,0 +1,262 @@
+//! Typed configuration (S13): TOML file -> [`TrainConfig`] with defaults,
+//! CLI overrides applied on top (`--set train.lr=0.2`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::toml;
+
+/// Full experiment/run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub model: String,
+    pub variant: String,
+    pub steps: u64,
+    pub lr: f64,
+    pub bits: f32,
+    /// Linear LR warmup fraction of total steps (paper: 4/90 epochs).
+    pub warmup_frac: f64,
+    /// Cosine decay to zero after warmup (paper Appendix E).
+    pub schedule: String,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub seed: u64,
+    pub data: DataConfig,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    /// Data-parallel simulation workers (1 = single worker).
+    pub workers: usize,
+    /// Bitwidth for the quantized gradient all-reduce (0 = fp32 reduce).
+    pub allreduce_bits: f32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    pub kind: String,
+    pub noise: f32,
+    pub hard_frac: f32,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            kind: "synthimg".into(),
+            noise: 0.6,
+            hard_frac: 0.08,
+            seed: 1234,
+        }
+    }
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "cnn".into(),
+            variant: "bhq".into(),
+            steps: 300,
+            lr: 0.1,
+            bits: 5.0,
+            warmup_frac: 0.05,
+            schedule: "cosine".into(),
+            eval_every: 50,
+            eval_batches: 8,
+            seed: 0,
+            data: DataConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            workers: 1,
+            allreduce_bits: 0.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = toml::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        c.apply_json(j)?;
+        Ok(c)
+    }
+
+    fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let get_s = |p: &str| j.path(p).and_then(Json::as_str).map(str::to_string);
+        let get_f = |p: &str| j.path(p).and_then(Json::as_f64);
+        if let Some(v) = get_s("train.model") {
+            self.model = v;
+        }
+        if let Some(v) = get_s("train.variant") {
+            self.variant = v;
+        }
+        if let Some(v) = get_f("train.steps") {
+            self.steps = v as u64;
+        }
+        if let Some(v) = get_f("train.lr") {
+            self.lr = v;
+        }
+        if let Some(v) = get_f("train.bits") {
+            self.bits = v as f32;
+        }
+        if let Some(v) = get_f("train.warmup_frac") {
+            self.warmup_frac = v;
+        }
+        if let Some(v) = get_s("train.schedule") {
+            self.schedule = v;
+        }
+        if let Some(v) = get_f("train.eval_every") {
+            self.eval_every = v as u64;
+        }
+        if let Some(v) = get_f("train.eval_batches") {
+            self.eval_batches = v as u64;
+        }
+        if let Some(v) = get_f("train.seed") {
+            self.seed = v as u64;
+        }
+        if let Some(v) = get_f("train.workers") {
+            self.workers = v as usize;
+        }
+        if let Some(v) = get_f("train.allreduce_bits") {
+            self.allreduce_bits = v as f32;
+        }
+        if let Some(v) = get_s("data.kind") {
+            self.data.kind = v;
+        }
+        if let Some(v) = get_f("data.noise") {
+            self.data.noise = v as f32;
+        }
+        if let Some(v) = get_f("data.hard_frac") {
+            self.data.hard_frac = v as f32;
+        }
+        if let Some(v) = get_f("data.seed") {
+            self.data.seed = v as u64;
+        }
+        if let Some(v) = get_s("paths.artifacts") {
+            self.artifacts_dir = v;
+        }
+        if let Some(v) = get_s("paths.out") {
+            self.out_dir = v;
+        }
+        Ok(())
+    }
+
+    /// Apply a `key=value` override with a dotted key ("train.lr=0.2").
+    pub fn set(&mut self, kv: &str) -> Result<()> {
+        let (key, val) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value, got {kv:?}"))?;
+        let (key, val) = (key.trim(), val.trim());
+        match key {
+            "train.model" | "model" => self.model = val.into(),
+            "train.variant" | "variant" => self.variant = val.into(),
+            "train.steps" | "steps" => self.steps = val.parse()?,
+            "train.lr" | "lr" => self.lr = val.parse()?,
+            "train.bits" | "bits" => self.bits = val.parse()?,
+            "train.warmup_frac" => self.warmup_frac = val.parse()?,
+            "train.schedule" => self.schedule = val.into(),
+            "train.eval_every" => self.eval_every = val.parse()?,
+            "train.eval_batches" => self.eval_batches = val.parse()?,
+            "train.seed" | "seed" => self.seed = val.parse()?,
+            "train.workers" | "workers" => self.workers = val.parse()?,
+            "train.allreduce_bits" => self.allreduce_bits = val.parse()?,
+            "data.kind" => self.data.kind = val.into(),
+            "data.noise" => self.data.noise = val.parse()?,
+            "data.hard_frac" => self.data.hard_frac = val.parse()?,
+            "data.seed" => self.data.seed = val.parse()?,
+            "paths.artifacts" => self.artifacts_dir = val.into(),
+            "paths.out" => self.out_dir = val.into(),
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(1.0..=16.0).contains(&self.bits) {
+            bail!("bits must be in [1, 16], got {}", self.bits);
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if !["cosine", "constant", "step"].contains(&self.schedule.as_str()) {
+            bail!("unknown schedule {:?}", self.schedule);
+        }
+        Ok(())
+    }
+
+    pub fn run_name(&self) -> String {
+        format!(
+            "{}_{}_b{}_s{}",
+            self.model, self.variant, self.bits, self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip_fields() {
+        let j = toml::parse(
+            "[train]\nmodel = \"mlp\"\nlr = 0.05\nbits = 4\nsteps = 10\n\
+             [data]\nkind = \"markov\"\nnoise = 0.3\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.lr, 0.05);
+        assert_eq!(c.bits, 4.0);
+        assert_eq!(c.steps, 10);
+        assert_eq!(c.data.kind, "markov");
+        assert_eq!(c.data.noise, 0.3);
+        // untouched fields keep defaults
+        assert_eq!(c.schedule, "cosine");
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TrainConfig::default();
+        c.set("lr=0.01").unwrap();
+        c.set("train.variant=psq").unwrap();
+        c.set("data.noise=0.9").unwrap();
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.variant, "psq");
+        assert_eq!(c.data.noise, 0.9);
+        assert!(c.set("nope=1").is_err());
+        assert!(c.set("malformed").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut c = TrainConfig::default();
+        c.bits = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.schedule = "exotic".into();
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn run_name_is_stable() {
+        let c = TrainConfig::default();
+        assert_eq!(c.run_name(), "cnn_bhq_b5_s0");
+    }
+}

@@ -1,0 +1,135 @@
+//! Checkpointing: flat parameter/momentum state as f32-LE blobs plus a
+//! JSON manifest (step, config echo) — the same wire format aot.py uses
+//! for initial parameters, so checkpoints and inits are interchangeable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+fn write_f32le(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+fn read_f32le(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{} length not a multiple of 4", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+impl Checkpoint {
+    /// Write `<dir>/ckpt_<step>.{params,momentum}.bin` + manifest.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let stem = dir.join(format!("ckpt_{:08}", self.step));
+        write_f32le(&stem.with_extension("params.bin"), &self.params)?;
+        write_f32le(&stem.with_extension("momentum.bin"), &self.momentum)?;
+        let meta = obj([
+            ("step", Json::from(self.step as usize)),
+            ("n_params", Json::from(self.params.len())),
+        ]);
+        let meta_path = stem.with_extension("json");
+        std::fs::write(&meta_path, meta.to_string_pretty())?;
+        Ok(meta_path)
+    }
+
+    pub fn load(meta_path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(meta_path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let step = j
+            .get("step")
+            .and_then(Json::as_usize)
+            .context("checkpoint missing step")? as u64;
+        let stem = meta_path.with_extension("");
+        let params = read_f32le(&stem.with_extension("params.bin"))?;
+        let momentum = read_f32le(&stem.with_extension("momentum.bin"))?;
+        if params.len() != momentum.len() {
+            bail!("params/momentum length mismatch");
+        }
+        Ok(Self {
+            step,
+            params,
+            momentum,
+        })
+    }
+
+    /// Most recent checkpoint in a run directory, if any.
+    pub fn latest(dir: &Path) -> Result<Option<Self>> {
+        if !dir.is_dir() {
+            return Ok(None);
+        }
+        let mut metas: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|s| s.to_str())
+                    .map_or(false, |s| s.starts_with("ckpt_") && s.ends_with(".json"))
+            })
+            .collect();
+        metas.sort();
+        match metas.last() {
+            Some(p) => Ok(Some(Self::load(p)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sq_ckpt_{}", std::process::id()));
+        let ck = Checkpoint {
+            step: 42,
+            params: vec![1.5, -2.25, 0.0],
+            momentum: vec![0.1, 0.2, 0.3],
+        };
+        let meta = ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&meta).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_picks_highest_step() {
+        let dir = std::env::temp_dir().join(format!("sq_ckpt2_{}", std::process::id()));
+        for step in [10u64, 200, 30] {
+            Checkpoint {
+                step,
+                params: vec![step as f32],
+                momentum: vec![0.0],
+            }
+            .save(&dir)
+            .unwrap();
+        }
+        let latest = Checkpoint::latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.step, 200);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_on_missing_dir_is_none() {
+        assert!(Checkpoint::latest(Path::new("/nonexistent/xyz"))
+            .unwrap()
+            .is_none());
+    }
+}

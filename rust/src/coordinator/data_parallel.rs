@@ -1,0 +1,142 @@
+//! Data-parallel FQT simulation (S12) — the paper's quantizers applied to
+//! *gradient communication*, the natural systems extension of §4 (the
+//! "future directions" the paper sketches for distributed training).
+//!
+//! W logical workers each evaluate the probe artifact on their own shard
+//! of the global batch (worker w, step t sees batch t*W + w). Their flat
+//! gradients are quantized with a native Rust quantizer (PTQ/PSQ/BHQ over
+//! a (workers, P) matrix — each worker's gradient is one "sample" row) and
+//! all-reduced; the momentum-SGD update then runs in Rust. This exercises
+//! the native quant stack on the L3 hot path and lets experiments compare
+//! fp32 vs low-bit all-reduce convergence.
+
+use anyhow::Result;
+
+use super::lr::Schedule;
+use crate::data::Dataset;
+use crate::quant::{GradQuantizer, Mat};
+use crate::runtime::{Executor, HostTensor};
+use crate::util::rng::Pcg32;
+
+pub struct DataParallel<'a> {
+    pub probe: &'a Executor,
+    pub workers: usize,
+    /// 0.0 = fp32 all-reduce; otherwise quantize worker gradients to this
+    /// bitwidth before averaging.
+    pub allreduce_bits: f32,
+    pub quantizer: GradQuantizer,
+    pub momentum: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DpStep {
+    pub loss: f64,
+    pub grad_norm_sq: f64,
+}
+
+impl<'a> DataParallel<'a> {
+    /// One synchronous data-parallel step: gather per-worker grads,
+    /// (optionally) quantize, average, apply momentum SGD in place.
+    pub fn step(
+        &self,
+        dataset: &dyn Dataset,
+        params: &mut [f32],
+        velocity: &mut [f32],
+        step: u64,
+        lr: f64,
+        model_bits: f32,
+        rng: &mut Pcg32,
+    ) -> Result<DpStep> {
+        let p = params.len();
+        let mut grads = Mat::zeros(self.workers, p);
+        let mut loss = 0.0;
+        for w in 0..self.workers {
+            let batch = dataset.batch(step * self.workers as u64 + w as u64);
+            let seed = (step * 1009 + w as u64) as f32;
+            let inputs = [
+                HostTensor::F32(params.to_vec()),
+                batch.x,
+                batch.y,
+                HostTensor::F32(vec![seed]),
+                HostTensor::F32(vec![model_bits]),
+            ];
+            let out = self.probe.run(&inputs)?;
+            loss += out[0].as_f32()?[0] as f64;
+            grads.row_mut(w).copy_from_slice(out[1].as_f32()?);
+        }
+        loss /= self.workers as f64;
+
+        // Quantized all-reduce: each worker's gradient is a sample row.
+        let reduced: Vec<f32> = if self.allreduce_bits > 0.0 && self.workers > 1 {
+            let q = self.quantizer.apply(&grads, self.allreduce_bits, rng);
+            mean_rows(&q)
+        } else {
+            mean_rows(&grads)
+        };
+
+        let mut gnorm = 0.0f64;
+        for ((pv, vv), g) in params.iter_mut().zip(velocity.iter_mut()).zip(&reduced) {
+            gnorm += f64::from(*g) * f64::from(*g);
+            *vv = (self.momentum * f64::from(*vv) + f64::from(*g)) as f32;
+            *pv -= (lr * f64::from(*vv)) as f32;
+        }
+        Ok(DpStep {
+            loss,
+            grad_norm_sq: gnorm,
+        })
+    }
+
+    /// Convenience full run (used by the ablation experiments).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &self,
+        dataset: &dyn Dataset,
+        params: &mut Vec<f32>,
+        steps: u64,
+        base_lr: f64,
+        schedule: Schedule,
+        warmup: u64,
+        model_bits: f32,
+        seed: u64,
+    ) -> Result<Vec<DpStep>> {
+        let mut velocity = vec![0.0f32; params.len()];
+        let mut rng = Pcg32::new(seed, 404);
+        let mut out = Vec::with_capacity(steps as usize);
+        for step in 0..steps {
+            let lr = schedule.lr(base_lr, step, steps, warmup);
+            let s = self.step(
+                dataset,
+                params,
+                &mut velocity,
+                step,
+                lr,
+                model_bits,
+                &mut rng,
+            )?;
+            out.push(s);
+        }
+        Ok(out)
+    }
+}
+
+fn mean_rows(m: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.cols];
+    let inv = 1.0 / m.rows as f32;
+    for i in 0..m.rows {
+        for (o, &v) in out.iter_mut().zip(m.row(i)) {
+            *o += v * inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_rows_averages() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 3.0, 2.0, 1.0]);
+        assert_eq!(mean_rows(&m), vec![2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Learning-rate schedules (paper Appendix E: linear warmup + cosine).
+
+/// Schedule kinds supported by the config system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Linear warmup then cosine decay to zero (the paper's setting).
+    Cosine,
+    /// Linear warmup then constant.
+    Constant,
+    /// Warmup then /10 at 50% and 75% of training (classic ResNet step).
+    Step,
+}
+
+impl Schedule {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "cosine" => Some(Schedule::Cosine),
+            "constant" => Some(Schedule::Constant),
+            "step" => Some(Schedule::Step),
+            _ => None,
+        }
+    }
+
+    /// LR at `step` of `total` with `base` peak LR and `warmup` steps.
+    pub fn lr(self, base: f64, step: u64, total: u64, warmup: u64) -> f64 {
+        let total = total.max(1);
+        if warmup > 0 && step < warmup {
+            return base * (step + 1) as f64 / warmup as f64;
+        }
+        match self {
+            Schedule::Constant => base,
+            Schedule::Cosine => {
+                let t = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+                let t = t.clamp(0.0, 1.0);
+                base * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            Schedule::Step => {
+                let frac = step as f64 / total as f64;
+                if frac < 0.5 {
+                    base
+                } else if frac < 0.75 {
+                    base * 0.1
+                } else {
+                    base * 0.01
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::Cosine;
+        let lr0 = s.lr(1.0, 0, 100, 10);
+        let lr5 = s.lr(1.0, 4, 100, 10);
+        let lr9 = s.lr(1.0, 9, 100, 10);
+        assert!((lr0 - 0.1).abs() < 1e-12);
+        assert!((lr5 - 0.5).abs() < 1e-12);
+        assert!((lr9 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = Schedule::Cosine;
+        assert!((s.lr(1.0, 10, 100, 10) - 1.0).abs() < 1e-9);
+        let mid = s.lr(1.0, 55, 100, 10);
+        assert!((mid - 0.5).abs() < 0.01, "{mid}");
+        let end = s.lr(1.0, 99, 100, 10);
+        assert!(end < 0.01, "{end}");
+    }
+
+    #[test]
+    fn cosine_monotone_after_warmup() {
+        let s = Schedule::Cosine;
+        let mut prev = f64::INFINITY;
+        for step in 10..100 {
+            let lr = s.lr(0.4, step, 100, 10);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn step_schedule_drops() {
+        let s = Schedule::Step;
+        assert_eq!(s.lr(1.0, 10, 100, 0), 1.0);
+        assert_eq!(s.lr(1.0, 60, 100, 0), 0.1);
+        assert!((s.lr(1.0, 80, 100, 0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_warmup_ok() {
+        assert_eq!(Schedule::Constant.lr(0.3, 0, 10, 0), 0.3);
+    }
+
+    #[test]
+    fn from_name_total() {
+        assert_eq!(Schedule::from_name("cosine"), Some(Schedule::Cosine));
+        assert_eq!(Schedule::from_name("nope"), None);
+    }
+}

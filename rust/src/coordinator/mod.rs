@@ -1,0 +1,17 @@
+//! L3 coordinator (S8/S12): training loop, LR schedules, checkpointing,
+//! and the data-parallel quantized-all-reduce simulation.
+//!
+//! The paper's contribution lives at L1/L2 (the quantizers and the FQT
+//! backward); per DESIGN.md the coordinator is the training *framework*
+//! around it — it owns process lifecycle, the step loop, metrics, and
+//! every experiment driver, and it is the only code on the request path.
+
+pub mod checkpoint;
+pub mod data_parallel;
+pub mod lr;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use data_parallel::DataParallel;
+pub use lr::Schedule;
+pub use trainer::{make_dataset, TrainReport, Trainer};

@@ -1,0 +1,221 @@
+//! Training coordinator (S8): the L3 driver around the fused train-step
+//! artifact — LR schedule, data feed, eval, metrics, checkpointing.
+//!
+//! Hot loop: one PJRT execute per step; the optimizer (momentum SGD,
+//! paper Appendix E) is fused *inside* the artifact, so the coordinator
+//! only shuttles the flat state vectors and scalars.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::lr::Schedule;
+use crate::config::TrainConfig;
+use crate::data::markov::{Markov, MarkovConfig};
+use crate::data::synthimg::{SynthImg, SynthImgConfig};
+use crate::data::Dataset;
+use crate::metrics::{CsvWriter, JsonlWriter};
+use crate::runtime::{Executor, HostTensor, Registry, Runtime, StepKind};
+use crate::util::json::{obj, Json};
+
+/// Final outcome of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub run_name: String,
+    pub steps: u64,
+    pub final_train_loss: f64,
+    pub final_eval_loss: f64,
+    pub final_eval_acc: f64,
+    pub diverged: bool,
+    pub wall_seconds: f64,
+    pub steps_per_second: f64,
+    pub curve: Vec<(u64, f64)>,
+    pub params: Vec<f32>,
+}
+
+/// Build the dataset matching a model's ABI from the config.
+pub fn make_dataset(cfg: &TrainConfig, meta_input: &[usize], kind_hint: &str) -> Box<dyn Dataset> {
+    if kind_hint == "markov" || cfg.data.kind == "markov" {
+        Box::new(Markov::new(MarkovConfig {
+            vocab: 256,
+            seq: meta_input[1],
+            batch: meta_input[0],
+            seed: cfg.data.seed,
+            ..Default::default()
+        }))
+    } else {
+        Box::new(SynthImg::new(SynthImgConfig {
+            classes: 10,
+            dims: meta_input[1..].to_vec(),
+            batch: meta_input[0],
+            noise: cfg.data.noise,
+            hard_frac: cfg.data.hard_frac,
+            seed: cfg.data.seed,
+        }))
+    }
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub train_exec: std::sync::Arc<Executor>,
+    pub eval_exec: std::sync::Arc<Executor>,
+    pub dataset: Box<dyn Dataset>,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    out_dir: PathBuf,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, reg: &Registry, cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let train_meta = reg.meta(&cfg.model, &cfg.variant, StepKind::Train)?;
+        let eval_meta = reg.meta(&cfg.model, "qat", StepKind::Eval)?;
+        let train_exec = rt.executor(train_meta)?;
+        let eval_exec = rt.executor(eval_meta)?;
+        let params = reg.init_params(&cfg.model)?;
+        if params.len() != train_meta.n_params {
+            bail!(
+                "init params {} != artifact n_params {}",
+                params.len(),
+                train_meta.n_params
+            );
+        }
+        let momentum = vec![0.0; params.len()];
+        let kind_hint = if cfg.model == "transformer" {
+            "markov"
+        } else {
+            "synthimg"
+        };
+        let dataset = make_dataset(&cfg, &train_meta.input_shape, kind_hint);
+        let out_dir = PathBuf::from(&cfg.out_dir).join(cfg.run_name());
+        Ok(Self {
+            cfg,
+            train_exec,
+            eval_exec,
+            dataset,
+            params,
+            momentum,
+            out_dir,
+        })
+    }
+
+    fn step_once(&mut self, step: u64, lr: f64) -> Result<(f64, f64)> {
+        let batch = self.dataset.batch(step);
+        // seed folds the run seed with the step so every step draws fresh
+        // SR noise but the whole run replays exactly.
+        let seed = (self.cfg.seed.wrapping_mul(1_000_003) + step) % 16_777_213;
+        let inputs = [
+            HostTensor::F32(std::mem::take(&mut self.params)),
+            HostTensor::F32(std::mem::take(&mut self.momentum)),
+            batch.x,
+            batch.y,
+            HostTensor::F32(vec![seed as f32]),
+            HostTensor::F32(vec![lr as f32]),
+            HostTensor::F32(vec![self.cfg.bits]),
+        ];
+        let mut out = self.train_exec.run(&inputs)?;
+        // outputs: (params', momentum', loss, acc)
+        let acc = out.pop().expect("acc").into_f32()?[0] as f64;
+        let loss = out.pop().expect("loss").into_f32()?[0] as f64;
+        self.momentum = out.pop().expect("momentum").into_f32()?;
+        self.params = out.pop().expect("params").into_f32()?;
+        Ok((loss, acc))
+    }
+
+    /// Single-step driver at the configured base LR — used by the bench
+    /// harness to measure hot-loop latency without schedule/logging.
+    pub fn train_step_bench(&mut self, step: u64) -> Result<(f64, f64)> {
+        self.step_once(step, self.cfg.lr)
+    }
+
+    /// Evaluate on `n` held-out batches (loss, accuracy).
+    pub fn evaluate(&self, n: u64) -> Result<(f64, f64)> {
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let b = self.dataset.eval_batch(i);
+            let inputs = [HostTensor::F32(self.params.clone()), b.x, b.y];
+            let out = self.eval_exec.run(&inputs)?;
+            loss += out[0].as_f32()?[0] as f64;
+            acc += out[1].as_f32()?[0] as f64;
+        }
+        Ok((loss / n as f64, acc / n as f64))
+    }
+
+    /// Run the configured number of steps, logging curves + checkpoints.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let schedule = Schedule::from_name(&self.cfg.schedule)
+            .context("unknown schedule")?;
+        let warmup = (self.cfg.steps as f64 * self.cfg.warmup_frac) as u64;
+        let mut jsonl = JsonlWriter::create(self.out_dir.join("log.jsonl"))?;
+        let mut csv = CsvWriter::create(
+            self.out_dir.join("curve.csv"),
+            &["step", "lr", "train_loss", "train_acc"],
+        )?;
+        let mut curve = Vec::new();
+        let mut diverged = false;
+        let mut last_loss = f64::NAN;
+        let t0 = Instant::now();
+        for step in 0..self.cfg.steps {
+            let lr = schedule.lr(self.cfg.lr, step, self.cfg.steps, warmup);
+            let (loss, acc) = self.step_once(step, lr)?;
+            last_loss = loss;
+            if !loss.is_finite() || loss > 1e4 {
+                diverged = true;
+                eprintln!("[train] {} diverged at step {step} (loss {loss})", self.cfg.run_name());
+                break;
+            }
+            curve.push((step, loss));
+            csv.rowf(&[step as f64, lr, loss, acc])?;
+            if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
+                let (el, ea) = self.evaluate(self.cfg.eval_batches)?;
+                jsonl.write(&obj([
+                    ("step", Json::from(step as usize)),
+                    ("lr", Json::from(lr)),
+                    ("train_loss", Json::from(loss)),
+                    ("train_acc", Json::from(acc)),
+                    ("eval_loss", Json::from(el)),
+                    ("eval_acc", Json::from(ea)),
+                ]))?;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (el, ea) = if diverged {
+            (f64::NAN, 0.0)
+        } else {
+            self.evaluate(self.cfg.eval_batches)?
+        };
+        let done = curve.len() as u64;
+        Ok(TrainReport {
+            run_name: self.cfg.run_name(),
+            steps: done,
+            final_train_loss: last_loss,
+            final_eval_loss: el,
+            final_eval_acc: ea,
+            diverged,
+            wall_seconds: wall,
+            steps_per_second: done as f64 / wall.max(1e-9),
+            curve,
+            params: self.params.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Trainer integration tests live in rust/tests/integration.rs (they
+    // need compiled artifacts); unit coverage here targets the pure bits.
+    use super::*;
+
+    #[test]
+    fn make_dataset_dispatch() {
+        let cfg = TrainConfig::default();
+        let d = make_dataset(&cfg, &[8, 16, 16, 3], "synthimg");
+        assert_eq!(d.batch_size(), 8);
+        let d = make_dataset(&cfg, &[4, 32], "markov");
+        assert_eq!(d.batch_size(), 4);
+        let b = d.batch(0);
+        assert_eq!(b.x.len(), 4 * 32);
+    }
+}

@@ -1,0 +1,192 @@
+//! "markov": synthetic language corpus (IWSLT14 stand-in, paper §5.4).
+//!
+//! Token sequences from a sparse first-order Markov chain whose rows mix
+//! a few high-probability transitions (learned early — the analogue of
+//! easy/frequent tokens) with a long uniform tail (persistently hard).
+//! The LM batch is (x, y) with y = x shifted left by one, matching the
+//! transformer artifact's ABI.
+
+use super::{Batch, Dataset};
+use crate::runtime::HostTensor;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct MarkovConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    /// Number of dominant next-tokens per state.
+    pub branch: usize,
+    /// Probability mass on the dominant transitions (rest is uniform).
+    pub peak_mass: f32,
+    pub seed: u64,
+}
+
+impl Default for MarkovConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 256,
+            seq: 64,
+            batch: 16,
+            branch: 4,
+            peak_mass: 0.9,
+            seed: 99,
+        }
+    }
+}
+
+pub struct Markov {
+    cfg: MarkovConfig,
+    /// succ[s] — the `branch` dominant successors of state s.
+    succ: Vec<Vec<u32>>,
+}
+
+impl Markov {
+    pub fn new(cfg: MarkovConfig) -> Self {
+        let mut rng = Pcg32::new(cfg.seed, 31);
+        let succ = (0..cfg.vocab)
+            .map(|_| {
+                (0..cfg.branch)
+                    .map(|_| rng.below(cfg.vocab as u32))
+                    .collect()
+            })
+            .collect();
+        Self { cfg, succ }
+    }
+
+    pub fn config(&self) -> &MarkovConfig {
+        &self.cfg
+    }
+
+    /// Per-token optimal cross-entropy of the chain (the loss floor a
+    /// perfect model converges to) in nats.
+    pub fn entropy_floor(&self) -> f64 {
+        let v = self.cfg.vocab as f64;
+        let b = self.cfg.branch as f64;
+        let p_peak = f64::from(self.cfg.peak_mass) / b;
+        let p_tail = (1.0 - f64::from(self.cfg.peak_mass)) / v;
+        // each dominant successor also receives the tail mass
+        let peak = p_peak + p_tail;
+        -(b * peak * peak.ln() + (v - b) * p_tail * p_tail.ln())
+    }
+
+    fn next(&self, s: u32, rng: &mut Pcg32) -> u32 {
+        if rng.uniform() < self.cfg.peak_mass {
+            let k = rng.below(self.cfg.branch as u32) as usize;
+            self.succ[s as usize][k]
+        } else {
+            rng.below(self.cfg.vocab as u32)
+        }
+    }
+
+    fn gen(&self, stream: u64, idx: u64) -> Batch {
+        let mut rng = Pcg32::new(self.cfg.seed ^ (stream << 21), idx + 1);
+        let n = self.cfg.batch;
+        let t = self.cfg.seq;
+        let mut x = Vec::with_capacity(n * t);
+        let mut y = Vec::with_capacity(n * t);
+        for _ in 0..n {
+            let mut s = rng.below(self.cfg.vocab as u32);
+            // x_t is the context token, y_t the next token
+            for _ in 0..t {
+                x.push(s as i32);
+                s = self.next(s, &mut rng);
+                y.push(s as i32);
+            }
+        }
+        Batch {
+            x: HostTensor::I32(x),
+            y: HostTensor::I32(y),
+        }
+    }
+}
+
+impl Dataset for Markov {
+    fn batch(&self, step: u64) -> Batch {
+        self.gen(0, step)
+    }
+
+    fn eval_batch(&self, idx: u64) -> Batch {
+        self.gen(1, idx)
+    }
+
+    fn batch_size(&self) -> usize {
+        self.cfg.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> Markov {
+        Markov::new(MarkovConfig::default())
+    }
+
+    fn tokens(t: &HostTensor) -> &[i32] {
+        match t {
+            HostTensor::I32(v) => v,
+            _ => panic!("expected i32"),
+        }
+    }
+
+    #[test]
+    fn deterministic_and_shifted() {
+        let d = ds();
+        let a = d.batch(1);
+        let b = d.batch(1);
+        assert_eq!(tokens(&a.x), tokens(&b.x));
+        // y is x shifted: y[t] == x[t+1] within a row
+        let x = tokens(&a.x);
+        let y = tokens(&a.y);
+        for row in 0..16 {
+            for t in 0..63 {
+                assert_eq!(y[row * 64 + t], x[row * 64 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let d = ds();
+        let b = d.batch(0);
+        assert!(tokens(&b.x).iter().all(|&t| (0..256).contains(&t)));
+        assert!(tokens(&b.y).iter().all(|&t| (0..256).contains(&t)));
+        assert_eq!(b.x.len(), 16 * 64);
+    }
+
+    #[test]
+    fn dominant_transitions_dominate() {
+        let d = ds();
+        let mut hits = 0u64;
+        let mut total = 0u64;
+        for step in 0..20 {
+            let b = d.batch(step);
+            let x = tokens(&b.x);
+            let y = tokens(&b.y);
+            for i in 0..x.len() {
+                total += 1;
+                if d.succ[x[i] as usize].contains(&(y[i] as u32)) {
+                    hits += 1;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.85, "dominant fraction {frac}");
+    }
+
+    #[test]
+    fn entropy_floor_sane() {
+        let d = ds();
+        let h = d.entropy_floor();
+        // must be far below uniform ln(256) ~ 5.55 and above ln(branch)
+        assert!(h < 3.5, "{h}");
+        assert!(h > (4f64).ln() * 0.5, "{h}");
+    }
+
+    #[test]
+    fn eval_differs_from_train() {
+        let d = ds();
+        assert_ne!(tokens(&d.batch(2).x), tokens(&d.eval_batch(2).x));
+    }
+}

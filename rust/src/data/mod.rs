@@ -1,0 +1,32 @@
+//! Synthetic data substrates (S9, DESIGN.md §4 substitutions).
+//!
+//! The paper trains on CIFAR10/ImageNet/IWSLT14; this repo's CPU-scale
+//! stand-ins are generated here, engineered to reproduce the *gradient
+//! structure* the paper's analysis hinges on: as training accuracy rises,
+//! most samples' gradient rows collapse toward zero while a few hard
+//! outliers stay large — exactly the row-range skew that separates
+//! PTQ / PSQ / BHQ.
+
+pub mod markov;
+pub mod synthimg;
+
+use crate::runtime::HostTensor;
+
+/// One training batch in ABI form.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: HostTensor,
+    pub y: HostTensor,
+}
+
+/// A deterministic, infinitely iterable synthetic dataset.
+pub trait Dataset {
+    /// Deterministic batch for a global step index (same step -> same
+    /// batch, across runs and workers).
+    fn batch(&self, step: u64) -> Batch;
+
+    /// Held-out batch stream disjoint from training (`batch`) draws.
+    fn eval_batch(&self, idx: u64) -> Batch;
+
+    fn batch_size(&self) -> usize;
+}

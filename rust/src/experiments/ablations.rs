@@ -1,0 +1,172 @@
+//! Ablations called out in DESIGN.md §6.
+
+use anyhow::Result;
+
+use super::common::{base_config, out_dir, warm_params};
+use crate::coordinator::trainer::make_dataset;
+use crate::coordinator::{DataParallel, Schedule};
+use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
+use crate::quant::bhq::{self, Proxy};
+use crate::quant::{GradQuantizer, Mat};
+use crate::runtime::{Executor, HostTensor, Registry, Runtime, StepKind};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+
+/// BHQ group-count proxy: Appendix D.5 as printed ("paper") vs the full
+/// D.4 bound ("extended"). Measured as empirical quantizer variance on
+/// (i) synthetic k-outlier matrices and (ii) the model's real activation
+/// gradient from the actgrad artifact.
+pub fn bhq_proxy(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let mut cfg = base_config(args, reg);
+    if args.flag("model").is_none() {
+        cfg.model = "cnn".into();
+    }
+    let reps: usize = args.flag_parse("reps")?.unwrap_or(100);
+    let bits: f32 = args.flag_parse("probe-bits")?.unwrap_or(4.0);
+    args.check_unknown()?;
+    let nb = crate::quant::nbins(bits);
+
+    let mut table = MarkdownTable::new(&[
+        "input",
+        "G(paper)",
+        "G(ext)",
+        "Var paper-proxy",
+        "Var extended",
+        "ext/paper",
+    ]);
+    let mut eval = |name: String, x: &Mat| {
+        let plan_p = bhq::build_plan_with(x, Proxy::Paper);
+        let plan_e = bhq::build_plan_with(x, Proxy::Extended);
+        let mut var = |proxy: Proxy| {
+            let mut rng = Pcg32::new(7, 7);
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += bhq::quantize_with(x, nb, &mut rng, proxy).deq.sq_err(x);
+            }
+            acc / reps as f64
+        };
+        let vp = var(Proxy::Paper);
+        let ve = var(Proxy::Extended);
+        table.row(vec![
+            name,
+            format!("{}", plan_p.n_groups),
+            format!("{}", plan_e.n_groups),
+            fmt_sig(vp, 3),
+            fmt_sig(ve, 3),
+            format!("{:.3}", ve / vp.max(1e-30)),
+        ]);
+    };
+
+    // synthetic k-outlier matrices
+    for k in [1usize, 2, 4, 8] {
+        let mut rng = Pcg32::new(k as u64, 1);
+        let mut x = Mat::zeros(32, 64);
+        for i in 0..32 {
+            let s = if i < k { 10.0 } else { 0.01 };
+            for v in x.row_mut(i) {
+                *v = rng.normal() * s;
+            }
+        }
+        eval(format!("synthetic {k}-outlier"), &x);
+    }
+
+    // the real activation gradient
+    let params = warm_params(rt, reg, &cfg, 100)?;
+    let meta = reg.meta(&cfg.model, "qat", StepKind::ActGrad)?;
+    let exec = rt.executor(meta)?;
+    let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
+    let b = dataset.batch(2024);
+    let out = exec.run(&[
+        HostTensor::F32(params),
+        b.x,
+        b.y,
+        HostTensor::F32(vec![0.0]),
+    ])?;
+    let flat = out[0].as_f32()?;
+    let n = meta.probe_shape[0];
+    let g = Mat::from_vec(n, flat.len() / n, flat.to_vec());
+    eval(format!("{} actgrad", cfg.model), &g);
+
+    println!("{}", table.render());
+    std::fs::create_dir_all(out_dir(args))?;
+    std::fs::write(out_dir(args).join("ablate_bhq_proxy.md"), table.render())?;
+    Ok(())
+}
+
+/// Gradient bifurcation ablation note: Q_b1 (the weight-gradient
+/// quantizer) is fixed at 8-bit stochastic PTQ in every artifact, as in
+/// the paper's Appendix E; the `ptq_nb1` aot variant (Q_b1 = identity,
+/// i.e. Banner et al.'s original setting) can be added to
+/// `python/compile/aot.py::artifact_plan` to ablate it end to end.
+pub fn bifurcation_note() -> Result<()> {
+    println!(
+        "bifurcation ablation: Q_b1 is 8-bit stochastic PTQ in all artifacts \
+         (paper Appendix E). Compare against `variant=qat` (Q_b1 = Q_b2 = id) \
+         via `exp fig3a --quant qat,ptq` for the no-quantization reference."
+    );
+    Ok(())
+}
+
+/// Data-parallel quantized all-reduce: convergence vs all-reduce bits.
+/// Workers' gradients form a (W, P) matrix quantized per-row — PSQ/BHQ
+/// across *workers* — before averaging (DESIGN.md S12).
+pub fn allreduce(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let mut cfg = base_config(args, reg);
+    if args.flag("model").is_none() {
+        cfg.model = "mlp".into();
+    }
+    let workers: usize = args.flag_parse("workers")?.unwrap_or(4);
+    let steps: u64 = args.flag_parse("dp-steps")?.unwrap_or(150);
+    let quant = args.flag("quant").unwrap_or("psq");
+    let q = GradQuantizer::from_name(quant)
+        .ok_or_else(|| anyhow::anyhow!("unknown quantizer {quant}"))?;
+    args.check_unknown()?;
+
+    let meta = reg.meta(&cfg.model, "qat", StepKind::Probe)?;
+    let exec = rt.executor(meta)?;
+    let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
+
+    let dir = out_dir(args);
+    let mut csv = CsvWriter::create(
+        dir.join("ablate_allreduce.csv"),
+        &["allreduce_bits", "final_loss", "mean_last10"],
+    )?;
+    let mut table = MarkdownTable::new(&["all-reduce", "final loss", "mean(last 10)"]);
+    for bits in [0.0f32, 4.0, 6.0, 8.0] {
+        let dp = DataParallel {
+            probe: &exec,
+            workers,
+            allreduce_bits: bits,
+            quantizer: q,
+            momentum: 0.9,
+        };
+        let mut params = reg.init_params(&cfg.model)?;
+        let hist = dp.train(
+            dataset.as_ref(),
+            &mut params,
+            steps,
+            cfg.lr,
+            Schedule::Cosine,
+            steps / 20,
+            8.0,
+            cfg.seed,
+        )?;
+        let final_loss = hist.last().map(|s| s.loss).unwrap_or(f64::NAN);
+        let tail: Vec<f64> = hist.iter().rev().take(10).map(|s| s.loss).collect();
+        let mean_tail = tail.iter().sum::<f64>() / tail.len().max(1) as f64;
+        let label = if bits == 0.0 {
+            "fp32".to_string()
+        } else {
+            format!("{quant}@{bits}b")
+        };
+        println!("{label}: final loss {final_loss:.4}, tail mean {mean_tail:.4}");
+        table.row(vec![
+            label,
+            format!("{final_loss:.4}"),
+            format!("{mean_tail:.4}"),
+        ]);
+        csv.rowf(&[f64::from(bits), final_loss, mean_tail])?;
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

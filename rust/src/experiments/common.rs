@@ -1,0 +1,69 @@
+//! Shared experiment plumbing.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::runtime::{Registry, Runtime};
+use crate::util::cli::Args;
+
+/// Parse "--bits 4,5,6" (default given by caller).
+pub fn bits_list(args: &Args, default: &[f32]) -> Vec<f32> {
+    match args.flag("bits") {
+        None => default.to_vec(),
+        Some(s) => s
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| p.trim().parse::<f32>().expect("bad --bits"))
+            .collect(),
+    }
+}
+
+pub fn out_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.flag("out").unwrap_or("results"))
+}
+
+/// Base TrainConfig from common experiment flags.
+pub fn base_config(args: &Args, reg: &Registry) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.artifacts_dir = reg.dir.display().to_string();
+    if let Some(m) = args.flag("model") {
+        cfg.model = m.into();
+    }
+    if let Some(s) = args.flag("steps") {
+        cfg.steps = s.parse().expect("bad --steps");
+    }
+    if let Some(l) = args.flag("lr") {
+        cfg.lr = l.parse().expect("bad --lr");
+    }
+    if let Some(s) = args.flag("seed") {
+        cfg.seed = s.parse().expect("bad --seed");
+    }
+    if let Some(o) = args.flag("out") {
+        cfg.out_dir = o.into();
+    } else {
+        cfg.out_dir = "results/runs".into();
+    }
+    cfg
+}
+
+/// Train `model` under QAT for `steps` to get realistically-sparse
+/// gradients (the paper probes variance mid-training), returning params.
+pub fn warm_params(
+    rt: &Runtime,
+    reg: &Registry,
+    base: &TrainConfig,
+    steps: u64,
+) -> Result<Vec<f32>> {
+    let mut cfg = base.clone();
+    cfg.variant = "qat".into();
+    cfg.steps = steps;
+    cfg.eval_every = steps.max(1);
+    let mut tr = Trainer::new(rt, reg, cfg)?;
+    let report = tr.train()?;
+    eprintln!(
+        "[warm] {} steps of QAT -> train loss {:.4}",
+        report.steps, report.final_train_loss
+    );
+    Ok(report.params)
+}

@@ -1,0 +1,164 @@
+//! Figure 3 — CIFAR10 convergence & variance (paper §5.1).
+//!
+//! (a) gradient variance vs bitwidth per quantizer, against the QAT
+//!     (subsampling) variance reference;
+//! (b)/(c) convergence curves and final accuracy vs bitwidth.
+//!
+//! Paper's claims to reproduce (shape, not absolute numbers):
+//!   * each fewer bit ~4x the quantization variance;
+//!   * BHQ ~ PTQ with ~3 fewer bits;
+//!   * accuracy degrades once quantization variance exceeds ~10% of the
+//!     QAT variance; PTQ below 6 bits decays/diverges first.
+
+use anyhow::Result;
+
+use super::common::{base_config, bits_list, out_dir, warm_params};
+use crate::coordinator::Trainer;
+use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
+use crate::runtime::{Registry, Runtime, StepKind};
+use crate::stats::GradVarianceProbe;
+use crate::{coordinator::trainer::make_dataset, runtime::Executor};
+use crate::util::cli::Args;
+
+pub fn fig3a(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let mut cfg = base_config(args, reg);
+    if args.flag("model").is_none() {
+        cfg.model = "cnn".into();
+    }
+    let bits = bits_list(args, &[2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    let seeds: usize = args.flag_parse("seeds")?.unwrap_or(12);
+    let warm: u64 = args.flag_parse("warm")?.unwrap_or(100);
+    let quants: Vec<&str> = args
+        .flag("quant")
+        .map(|s| s.split(',').collect())
+        .unwrap_or_else(|| vec!["ptq", "psq", "bhq"]);
+    args.check_unknown()?;
+
+    let params = warm_params(rt, reg, &cfg, warm)?;
+    let meta = reg.meta(&cfg.model, "qat", StepKind::Probe)?;
+    let dataset = make_dataset(&cfg, &meta.input_shape, if cfg.model == "transformer" { "markov" } else { "synthimg" });
+
+    // QAT subsampling variance (the Fig-3a horizontal reference line).
+    let qat_exec = rt.executor(meta)?;
+    let qat_probe = GradVarianceProbe::new(&qat_exec);
+    let batches: Vec<_> = (0..seeds as u64)
+        .map(|i| {
+            let b = dataset.batch(10_000 + i);
+            (b.x, b.y)
+        })
+        .collect();
+    let qat_var = qat_probe.batch_variance(&params, &batches, 8.0)?;
+    println!(
+        "QAT (subsampling) variance: {:.6e}  ||E g||^2 = {:.6e}",
+        qat_var.quant_variance, qat_var.mean_sq_norm
+    );
+
+    let dir = out_dir(args);
+    let mut csv = CsvWriter::create(
+        dir.join(format!("fig3a_{}.csv", cfg.model)),
+        &["quantizer", "bits", "quant_variance", "qat_variance", "ratio"],
+    )?;
+    let mut table = MarkdownTable::new(&["quantizer", "bits", "Var[quant]", "Var/Var_QAT"]);
+
+    let fixed = dataset.batch(424_242);
+    for q in &quants {
+        let meta = reg.meta(&cfg.model, q, StepKind::Probe)?;
+        let exec = rt.executor(meta)?;
+        let probe = GradVarianceProbe::new(&exec);
+        for &b in &bits {
+            let rep = probe.quantization_variance(&params, &fixed.x, &fixed.y, b, seeds, 7)?;
+            let ratio = rep.quant_variance / qat_var.quant_variance.max(1e-30);
+            println!(
+                "{q} @ {b} bits: Var_quant = {:.6e} ({}x QAT)",
+                rep.quant_variance,
+                fmt_sig(ratio, 3)
+            );
+            csv.rowf(&[0.0, f64::from(b), rep.quant_variance, qat_var.quant_variance, ratio])?;
+            table.row(vec![
+                q.to_string(),
+                format!("{b}"),
+                fmt_sig(rep.quant_variance, 4),
+                fmt_sig(ratio, 3),
+            ]);
+        }
+    }
+    println!("\n{}", table.render());
+    println!("csv -> {}", dir.join(format!("fig3a_{}.csv", cfg.model)).display());
+    Ok(())
+}
+
+pub fn fig3bc(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let mut cfg = base_config(args, reg);
+    if args.flag("model").is_none() {
+        cfg.model = "cnn".into();
+    }
+    let bits = bits_list(args, &[4.0, 5.0, 6.0, 7.0, 8.0]);
+    let quants: Vec<String> = args
+        .flag("quant")
+        .map(|s| s.split(',').map(String::from).collect())
+        .unwrap_or_else(|| vec!["ptq".into(), "psq".into(), "bhq".into()]);
+    args.check_unknown()?;
+
+    let dir = out_dir(args);
+    let mut table = MarkdownTable::new(&["setting", "eval acc", "train loss", "steps/s"]);
+    let mut csv = CsvWriter::create(
+        dir.join(format!("fig3c_{}.csv", cfg.model)),
+        &["quantizer", "bits", "eval_acc", "train_loss", "diverged"],
+    )?;
+
+    // Baselines: exact + QAT.
+    for v in ["exact", "qat"] {
+        let mut c = cfg.clone();
+        c.variant = v.into();
+        let rep = Trainer::new(rt, reg, c)?.train()?;
+        table.row(vec![
+            v.into(),
+            format!("{:.4}", rep.final_eval_acc),
+            format!("{:.4}", rep.final_train_loss),
+            format!("{:.2}", rep.steps_per_second),
+        ]);
+        csv.row(&[
+            v.into(),
+            "32".into(),
+            format!("{}", rep.final_eval_acc),
+            format!("{}", rep.final_train_loss),
+            format!("{}", rep.diverged),
+        ])?;
+        println!("{v}: acc {:.4} loss {:.4}", rep.final_eval_acc, rep.final_train_loss);
+    }
+
+    for q in &quants {
+        for &b in &bits {
+            let mut c = cfg.clone();
+            c.variant = q.clone();
+            c.bits = b;
+            let rep = Trainer::new(rt, reg, c)?.train()?;
+            let tag = format!("{q}@{b}b");
+            table.row(vec![
+                tag.clone(),
+                if rep.diverged {
+                    "diverge".into()
+                } else {
+                    format!("{:.4}", rep.final_eval_acc)
+                },
+                format!("{:.4}", rep.final_train_loss),
+                format!("{:.2}", rep.steps_per_second),
+            ]);
+            csv.row(&[
+                q.clone(),
+                format!("{b}"),
+                format!("{}", rep.final_eval_acc),
+                format!("{}", rep.final_train_loss),
+                format!("{}", rep.diverged),
+            ])?;
+            println!(
+                "{tag}: acc {:.4} loss {:.4}{}",
+                rep.final_eval_acc,
+                rep.final_train_loss,
+                if rep.diverged { " DIVERGED" } else { "" }
+            );
+        }
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Figure 4 — gradient histograms and quantization bin sizes (§5.2).
+//!
+//! Pipeline: warm the model under QAT, pull the activation gradient at
+//! the probe layer via the `actgrad` artifact, then apply each native
+//! Rust quantizer at 8 bits and report (i) the histogram of quantized
+//! codes (utilization / entropy — PTQ shows the zero spike), (ii) the
+//! distribution of per-row bin sizes, and (iii) the quantizer variance
+//! Var[Q_b(g) | g] — the quantities the paper's Fig 4 plots.
+
+use anyhow::Result;
+
+use super::common::{base_config, out_dir, warm_params};
+use crate::coordinator::trainer::make_dataset;
+use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
+use crate::quant::{GradQuantizer, Mat};
+use crate::runtime::{Executor, HostTensor, Registry, Runtime, StepKind};
+use crate::stats::Histogram;
+use crate::util::rng::Pcg32;
+
+use crate::util::cli::Args;
+
+pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let mut cfg = base_config(args, reg);
+    if args.flag("model").is_none() {
+        cfg.model = "cnn".into();
+    }
+    let warm: u64 = args.flag_parse("warm")?.unwrap_or(150);
+    let bits: f32 = args.flag_parse("probe-bits")?.unwrap_or(8.0);
+    let reps: usize = args.flag_parse("reps")?.unwrap_or(50);
+    args.check_unknown()?;
+
+    let params = warm_params(rt, reg, &cfg, warm)?;
+    let meta = reg.meta(&cfg.model, "qat", StepKind::ActGrad)?;
+    let exec = rt.executor(meta)?;
+    let dataset = make_dataset(
+        &cfg,
+        &meta.input_shape,
+        if cfg.model == "transformer" { "markov" } else { "synthimg" },
+    );
+    let batch = dataset.batch(31_337);
+    let inputs = [
+        HostTensor::F32(params),
+        batch.x,
+        batch.y,
+        HostTensor::F32(vec![0.0]),
+    ];
+    let out = exec.run(&inputs)?;
+    let flat = out[0].as_f32()?;
+    let n = meta.probe_shape[0];
+    let d = flat.len() / n;
+    let g = Mat::from_vec(n, d, flat.to_vec());
+
+    // Row dynamic ranges — "close to zero for most samples, large for a
+    // few outliers" is the paper's empirical premise; print the skew.
+    let mut ranges: Vec<f32> = g.row_minmax().iter().map(|&(lo, hi)| hi - lo).collect();
+    let mut sorted = ranges.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = sorted[n / 2];
+    let max = sorted[n - 1];
+    println!(
+        "activation gradient ({n}x{d}): median row range {:.3e}, max {:.3e}, skew {:.1}x",
+        med,
+        max,
+        max / med.max(1e-30)
+    );
+
+    let dir = out_dir(args);
+    let mut table = MarkdownTable::new(&[
+        "quantizer",
+        "Var[Q(g)|g]",
+        "bin util",
+        "code entropy (bits)",
+        "max bin size",
+        "median bin size",
+    ]);
+    let mut rng = Pcg32::new(4242, 0);
+    for q in GradQuantizer::PAPER {
+        // empirical quantizer variance over `reps` rounding draws
+        let mut var = 0.0f64;
+        let mut last = None;
+        for _ in 0..reps {
+            let out = match q {
+                GradQuantizer::Ptq => crate::quant::ptq::quantize(&g, crate::quant::nbins(bits), &mut rng),
+                GradQuantizer::Psq => crate::quant::psq::quantize(&g, crate::quant::nbins(bits), &mut rng),
+                GradQuantizer::Bhq => crate::quant::bhq::quantize(&g, crate::quant::nbins(bits), &mut rng),
+                _ => unreachable!(),
+            };
+            var += out.deq.sq_err(&g);
+            last = Some(out);
+        }
+        var /= reps as f64;
+        let qz = last.unwrap();
+
+        let hist = Histogram::from_values(&qz.codes.data, 64);
+        let mut bins = qz.row_bin_size.clone();
+        bins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let max_bin = bins[bins.len() - 1];
+        let med_bin = bins[bins.len() / 2];
+        table.row(vec![
+            q.name().into(),
+            fmt_sig(var, 3),
+            format!("{:.3}", hist.utilization()),
+            format!("{:.2}", hist.entropy_bits()),
+            fmt_sig(f64::from(max_bin), 3),
+            fmt_sig(f64::from(med_bin), 3),
+        ]);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(
+            dir.join(format!("fig4_codes_{}.csv", q.name())),
+            hist.to_csv(),
+        )?;
+        let mut bcsv = CsvWriter::create(
+            dir.join(format!("fig4_binsizes_{}.csv", q.name())),
+            &["row", "bin_size", "row_range"],
+        )?;
+        for (i, (&b, &r)) in qz.row_bin_size.iter().zip(&ranges).enumerate() {
+            bcsv.rowf(&[i as f64, f64::from(b), f64::from(r)])?;
+        }
+    }
+    // row-range histogram (left panel of Fig 4)
+    std::fs::write(
+        dir.join("fig4_row_ranges.csv"),
+        Histogram::from_values(&ranges, 64).to_csv(),
+    )?;
+    ranges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("\n{}", table.render());
+    println!("csv -> {}/fig4_*.csv", dir.display());
+    Ok(())
+}

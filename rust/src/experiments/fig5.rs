@@ -1,0 +1,117 @@
+//! Figure 5 — machine-translation stand-in (paper §5.4).
+//!
+//! (a) transformer gradient variance vs bits per quantizer;
+//! (b) task quality vs bits (token accuracy / perplexity stand-in for
+//!     BLEU; same quantizers + QAT reference).
+//!
+//! Claims to reproduce: PSQ/BHQ variance << PTQ at equal bits; 5-bit BHQ
+//! variance ~ 8-bit PTQ; PTQ diverges at 5 bits while BHQ stays within
+//! ~1% of QAT.
+
+use anyhow::Result;
+
+use super::common::{base_config, bits_list, out_dir, warm_params};
+use crate::coordinator::trainer::make_dataset;
+use crate::coordinator::Trainer;
+use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
+use crate::runtime::{Executor, Registry, Runtime, StepKind};
+use crate::stats::GradVarianceProbe;
+use crate::util::cli::Args;
+
+pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let mut cfg = base_config(args, reg);
+    cfg.model = "transformer".into();
+    if args.flag("lr").is_none() {
+        cfg.lr = 0.05; // transformer wants a gentler peak LR than the CNN
+    }
+    let bits = bits_list(args, &[4.0, 5.0, 6.0, 7.0, 8.0]);
+    let seeds: usize = args.flag_parse("seeds")?.unwrap_or(8);
+    let warm: u64 = args.flag_parse("warm")?.unwrap_or(80);
+    let train_bits = match args.flag("train-bits") {
+        Some(s) => s
+            .split(',')
+            .map(|p| p.trim().parse::<f32>().expect("bad --train-bits"))
+            .collect(),
+        None => vec![5.0, 8.0],
+    };
+    args.check_unknown()?;
+
+    let dir = out_dir(args);
+
+    // (a) variance vs bits
+    let params = warm_params(rt, reg, &cfg, warm)?;
+    let meta = reg.meta("transformer", "qat", StepKind::Probe)?;
+    let dataset = make_dataset(&cfg, &meta.input_shape, "markov");
+    let fixed = dataset.batch(555);
+    let mut csv = CsvWriter::create(
+        dir.join("fig5a_variance.csv"),
+        &["quantizer", "bits", "quant_variance"],
+    )?;
+    let mut table_a = MarkdownTable::new(&["quantizer", "bits", "Var[quant]"]);
+    for q in ["ptq", "psq", "bhq"] {
+        let exec = rt.executor(reg.meta("transformer", q, StepKind::Probe)?)?;
+        let probe = GradVarianceProbe::new(&exec);
+        for &b in &bits {
+            let rep = probe.quantization_variance(&params, &fixed.x, &fixed.y, b, seeds, 3)?;
+            println!("{q} @ {b}: Var {:.6e}", rep.quant_variance);
+            csv.row(&[q.into(), format!("{b}"), format!("{}", rep.quant_variance)])?;
+            table_a.row(vec![q.into(), format!("{b}"), fmt_sig(rep.quant_variance, 4)]);
+        }
+    }
+    println!("\n{}", table_a.render());
+
+    // (b) task quality vs bits
+    let mut table_b = MarkdownTable::new(&["setting", "eval token acc", "eval loss"]);
+    let mut csvb = CsvWriter::create(
+        dir.join("fig5b_quality.csv"),
+        &["quantizer", "bits", "eval_acc", "eval_loss", "diverged"],
+    )?;
+    let mut qat_cfg = cfg.clone();
+    qat_cfg.variant = "qat".into();
+    let rep = Trainer::new(rt, reg, qat_cfg)?.train()?;
+    table_b.row(vec![
+        "qat".into(),
+        format!("{:.4}", rep.final_eval_acc),
+        format!("{:.4}", rep.final_eval_loss),
+    ]);
+    csvb.row(&[
+        "qat".into(),
+        "32".into(),
+        format!("{}", rep.final_eval_acc),
+        format!("{}", rep.final_eval_loss),
+        "false".into(),
+    ])?;
+    println!("qat: token acc {:.4}", rep.final_eval_acc);
+    for q in ["ptq", "psq", "bhq"] {
+        for &b in &train_bits {
+            let mut c = cfg.clone();
+            c.variant = q.into();
+            c.bits = b;
+            let rep = Trainer::new(rt, reg, c)?.train()?;
+            let tag = format!("{q}@{b}b");
+            println!(
+                "{tag}: token acc {:.4}{}",
+                rep.final_eval_acc,
+                if rep.diverged { " DIVERGED" } else { "" }
+            );
+            table_b.row(vec![
+                tag,
+                if rep.diverged {
+                    "diverge".into()
+                } else {
+                    format!("{:.4}", rep.final_eval_acc)
+                },
+                format!("{:.4}", rep.final_eval_loss),
+            ]);
+            csvb.row(&[
+                q.into(),
+                format!("{b}"),
+                format!("{}", rep.final_eval_acc),
+                format!("{}", rep.final_eval_loss),
+                format!("{}", rep.diverged),
+            ])?;
+        }
+    }
+    println!("\n{}", table_b.render());
+    Ok(())
+}

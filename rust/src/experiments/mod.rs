@@ -1,0 +1,36 @@
+//! Experiment harness (S15): one module per paper table/figure.
+//! See DESIGN.md §6 for the experiment index.
+
+pub mod ablations;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod thm1;
+
+use anyhow::Result;
+
+use crate::runtime::{Registry, Runtime};
+use crate::util::cli::Args;
+
+/// Dispatch `statquant exp <name> ...`.
+pub fn run(name: &str, rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    match name {
+        "fig3a" => fig3::fig3a(rt, reg, args),
+        "fig3bc" | "fig3b" | "fig3c" => fig3::fig3bc(rt, reg, args),
+        "fig4" => fig4::run(rt, reg, args),
+        "fig5" => fig5::run(rt, reg, args),
+        "table1" => table1::run(rt, reg, args),
+        "table2" => table2::run(rt, reg, args),
+        "thm1" => thm1::run(rt, reg, args),
+        "ablate-bhq-proxy" => ablations::bhq_proxy(rt, reg, args),
+        "ablate-bifurcation" => ablations::bifurcation_note(),
+        "ablate-allreduce" => ablations::allreduce(rt, reg, args),
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; known: fig3a fig3bc fig4 fig5 \
+             table1 table2 thm1 ablate-bhq-proxy ablate-allreduce"
+        ),
+    }
+}

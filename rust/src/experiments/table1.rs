@@ -1,0 +1,91 @@
+//! Table 1 — validation accuracy (training loss) across bitwidths (§5.3).
+//!
+//! Paper: ResNet18/ResNet50 on ImageNet, quantizers {PTQ, PSQ, BHQ} x
+//! gradient bits {4..8} + exact + QAT. Here: MiniCNN ("resnet18-proxy")
+//! and MiniResNet ("resnet50-proxy") on synthimg (DESIGN.md §4). Shape
+//! claims to reproduce: PSQ/BHQ ~ QAT at 8 bits while PTQ lags; the gap
+//! grows as bits fall; at 4 bits PTQ diverges while PSQ/BHQ still train;
+//! BHQ@5 ~ PTQ@8.
+
+use anyhow::Result;
+
+use super::common::{base_config, bits_list, out_dir};
+use crate::coordinator::Trainer;
+use crate::metrics::{CsvWriter, MarkdownTable};
+use crate::runtime::{Registry, Runtime};
+use crate::util::cli::Args;
+
+pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let cfg0 = base_config(args, reg);
+    let models: Vec<String> = args
+        .flag("models")
+        .map(|s| s.split(',').map(String::from).collect())
+        .unwrap_or_else(|| vec!["cnn".into(), "resnet".into()]);
+    let bits = bits_list(args, &[4.0, 5.0, 6.0, 7.0, 8.0]);
+    let quants = ["ptq", "psq", "bhq"];
+    args.check_unknown()?;
+
+    let dir = out_dir(args);
+    let mut csv = CsvWriter::create(
+        dir.join("table1.csv"),
+        &["model", "setting", "quantizer", "bits", "eval_acc", "train_loss", "diverged"],
+    )?;
+
+    for model in &models {
+        let mut table = MarkdownTable::new(&["Setting", "PTQ", "PSQ", "BHQ"]);
+        println!("=== Table 1: {model} (proxy) ===");
+
+        let mut run_one = |variant: &str, b: f32| -> Result<(String, f64, bool)> {
+            let mut c = cfg0.clone();
+            c.model = model.clone();
+            c.variant = variant.into();
+            c.bits = b;
+            let rep = Trainer::new(rt, reg, c)?.train()?;
+            let cell = if rep.diverged {
+                "diverge".to_string()
+            } else {
+                format!("{:.2} ({:.3})", 100.0 * rep.final_eval_acc, rep.final_train_loss)
+            };
+            println!("  {variant}@{b}: {cell}");
+            Ok((cell, rep.final_eval_acc, rep.diverged))
+        };
+
+        // Exact + QAT rows (bits column irrelevant).
+        for v in ["exact", "qat"] {
+            let (cell, acc, div) = run_one(v, 8.0)?;
+            table.row(vec![v.into(), cell, "—".into(), "—".into()]);
+            csv.row(&[
+                model.clone(),
+                v.into(),
+                v.into(),
+                "32".into(),
+                format!("{acc}"),
+                "".into(),
+                format!("{div}"),
+            ])?;
+        }
+
+        for &b in &bits {
+            let mut cells = vec![format!("{}-bit FQT", b as u32)];
+            for q in quants {
+                let (cell, acc, div) = run_one(q, b)?;
+                cells.push(cell);
+                csv.row(&[
+                    model.clone(),
+                    format!("{}-bit", b as u32),
+                    q.into(),
+                    format!("{b}"),
+                    format!("{acc}"),
+                    "".into(),
+                    format!("{div}"),
+                ])?;
+            }
+            table.row(cells);
+        }
+        let rendered = table.render();
+        println!("\n{rendered}");
+        std::fs::write(dir.join(format!("table1_{model}.md")), rendered)?;
+    }
+    println!("csv -> {}", dir.join("table1.csv").display());
+    Ok(())
+}

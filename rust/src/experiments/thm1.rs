@@ -1,0 +1,109 @@
+//! Theorem 1 / Eq. 10 statistical validation (DESIGN.md E10/E11).
+//!
+//! (1) Unbiasedness: E[FQT grad | batch] must equal the QAT gradient.
+//!     We average K probe draws per quantizer and report the max
+//!     z-score against the Monte-Carlo standard error and the cosine
+//!     similarity — an end-to-end check through the real model graph.
+//! (2) The 4x-per-bit law: fit the slope of log2 Var vs bits; Theorem 2 +
+//!     Eq. 9 predict slope ~ -2 (each fewer bit quadruples variance).
+
+use anyhow::Result;
+
+use super::common::{base_config, bits_list, warm_params};
+use crate::coordinator::trainer::make_dataset;
+use crate::metrics::MarkdownTable;
+use crate::runtime::{Executor, Registry, Runtime, StepKind};
+use crate::stats::GradVarianceProbe;
+use crate::util::cli::Args;
+
+pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
+    let mut cfg = base_config(args, reg);
+    if args.flag("model").is_none() {
+        cfg.model = "mlp".into();
+    }
+    let seeds: usize = args.flag_parse("seeds")?.unwrap_or(64);
+    let warm: u64 = args.flag_parse("warm")?.unwrap_or(60);
+    let bits_fit = bits_list(args, &[3.0, 4.0, 5.0, 6.0, 7.0]);
+    args.check_unknown()?;
+
+    let params = warm_params(rt, reg, &cfg, warm)?;
+    let meta = reg.meta(&cfg.model, "qat", StepKind::Probe)?;
+    let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
+    let fixed = dataset.batch(999);
+
+    // QAT reference gradient (deterministic given the batch).
+    let qat_exec = rt.executor(meta)?;
+    let qat = GradVarianceProbe::new(&qat_exec);
+    let (g_ref, _) = qat.mean_gradient(&params, &fixed.x, &fixed.y, 8.0, 1, 0)?;
+
+    let mut table = MarkdownTable::new(&[
+        "quantizer",
+        "bits",
+        "max |z|",
+        "cosine(E[g_fqt], g_qat)",
+        "verdict",
+    ]);
+    for q in ["ptq", "psq", "bhq"] {
+        let exec = rt.executor(reg.meta(&cfg.model, q, StepKind::Probe)?)?;
+        let probe = GradVarianceProbe::new(&exec);
+        for &b in &[4.0f32, 6.0] {
+            let (mean, coord_var) =
+                probe.mean_gradient(&params, &fixed.x, &fixed.y, b, seeds, 11)?;
+            // exact per-coordinate z-scores (floor tiny SEs: coordinates
+            // reproduced deterministically have var 0 up to f32 noise)
+            let gnorm: f64 =
+                (g_ref.iter().map(|&v| v * v).sum::<f64>() / g_ref.len() as f64).sqrt();
+            let max_z = mean
+                .iter()
+                .zip(&g_ref)
+                .zip(&coord_var)
+                .map(|((&m, &r), &v)| {
+                    let se = (v / seeds as f64).sqrt().max(1e-6 * gnorm);
+                    (m - r).abs() / se
+                })
+                .fold(0.0f64, f64::max);
+            let dot: f64 = mean.iter().zip(&g_ref).map(|(&a, &b)| a * b).sum();
+            let na: f64 = mean.iter().map(|&a| a * a).sum::<f64>().sqrt();
+            let nb: f64 = g_ref.iter().map(|&a| a * a).sum::<f64>().sqrt();
+            let cos = dot / (na * nb).max(1e-30);
+            // max over P coordinates of |N(0,1)| concentrates ~ sqrt(2 ln P) ~ 4.5;
+            // 8 is a generous unbiasedness acceptance threshold.
+            let ok = max_z < 8.0 && cos > 0.99;
+            println!(
+                "{q}@{b}: max|z| = {max_z:.2}, cos = {cos:.5} -> {}",
+                if ok { "UNBIASED" } else { "SUSPECT" }
+            );
+            table.row(vec![
+                q.into(),
+                format!("{b}"),
+                format!("{max_z:.2}"),
+                format!("{cos:.5}"),
+                if ok { "unbiased ✓".into() } else { "SUSPECT".into() },
+            ]);
+        }
+    }
+    println!("\n{}", table.render());
+
+    // (2) 4x law: slope of log2(Var) vs bits for PTQ.
+    let exec = rt.executor(reg.meta(&cfg.model, "ptq", StepKind::Probe)?)?;
+    let probe = GradVarianceProbe::new(&exec);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    println!("\n4x-per-bit law (PTQ):");
+    for &b in &bits_fit {
+        let rep = probe.quantization_variance(&params, &fixed.x, &fixed.y, b, seeds.min(24), 21)?;
+        println!("  {b} bits: Var = {:.6e}", rep.quant_variance);
+        xs.push(f64::from(b));
+        ys.push(rep.quant_variance.max(1e-300).log2());
+    }
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    println!(
+        "slope d log2(Var) / d bits = {slope:.3}  (theory: -2.0, i.e. 4x per bit)"
+    );
+    Ok(())
+}

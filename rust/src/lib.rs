@@ -1,0 +1,32 @@
+//! # StatQuant — a statistical framework for low-bitwidth training
+//!
+//! Reproduction of Chen, Gai, Yao, Mahoney & Gonzalez, *"A Statistical
+//! Framework for Low-bitwidth Training of Deep Neural Networks"*
+//! (NeurIPS 2020), as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas kernels for the fused
+//!   stochastic-rounding quantizer and the blocked quantized GEMM.
+//! - **L2** (`python/compile/`): the paper's gradient quantizers
+//!   (PTQ/PSQ/BHQ + FP8/BFP extension formats) and the FQT backward pass
+//!   (Eq. 6) inside JAX models, AOT-lowered to HLO text.
+//! - **L3** (this crate): the training framework — PJRT runtime,
+//!   coordinator (train loop, LR schedules, checkpointing, data-parallel
+//!   simulation with quantized all-reduce), synthetic data substrates,
+//!   native quantizers, statistics engine, and the experiment harness
+//!   that regenerates every table and figure in the paper's evaluation.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! models once; the `statquant` binary is self-contained afterwards.
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod util;

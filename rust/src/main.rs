@@ -1,0 +1,184 @@
+//! `statquant` — CLI launcher for the StatQuant training framework.
+//!
+//! Commands:
+//!   train [config.toml] [--set k=v ...]      one training run
+//!   eval  --model M [--ckpt meta.json]       evaluate a checkpoint/init
+//!   probe --model M --variant Q [--bits ...] gradient-variance probe
+//!   exp <name> [flags]                       regenerate a paper table/figure
+//!   list                                     show available artifacts
+//!
+//! Python never runs here: `make artifacts` must have populated the
+//! artifacts directory (HLO text + metadata + init params) beforehand.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::{Checkpoint, Trainer};
+use statquant::experiments;
+use statquant::metrics::fmt_sig;
+use statquant::runtime::{Executor, Registry, Runtime, StepKind};
+use statquant::stats::GradVarianceProbe;
+use statquant::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: statquant <train|eval|probe|exp|list> [options]\n\
+     \n\
+     train [config.toml] [--artifacts DIR] [--set key=value ...]\n\
+     eval  --model M [--artifacts DIR] [--ckpt ckpt_xxx.json] [--batches N]\n\
+     probe --model M --variant Q [--bits 4,5,6] [--seeds K] [--warm N]\n\
+     exp   <fig3a|fig3bc|fig4|fig5|table1|table2|thm1|ablate-*> [flags]\n\
+     list  [--artifacts DIR]\n"
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts").to_string();
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        "list" => {
+            args.check_unknown()?;
+            let reg = Registry::open(&artifacts)?;
+            let mut keys = reg.keys();
+            keys.sort();
+            for k in keys {
+                println!("{k}");
+            }
+            Ok(())
+        }
+        "train" => cmd_train(&args, &artifacts),
+        "eval" => cmd_eval(&args, &artifacts),
+        "probe" => cmd_probe(&args, &artifacts),
+        "exp" => {
+            let name = args
+                .positional
+                .first()
+                .context("exp requires a name (e.g. `statquant exp fig3a`)")?
+                .clone();
+            let rt = Runtime::cpu()?;
+            let reg = Registry::open(&artifacts)?;
+            experiments::run(&name, &rt, &reg, &args)
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    let mut cfg = match args.positional.first() {
+        Some(path) => TrainConfig::from_toml_file(Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    cfg.artifacts_dir = artifacts.to_string();
+    for kv in args.flag_all("set") {
+        cfg.set(kv)?;
+    }
+    args.check_unknown()?;
+    cfg.validate()?;
+
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open(&cfg.artifacts_dir)?;
+    println!(
+        "[train] {} on {} ({} steps, lr {}, {} bits)",
+        cfg.variant, cfg.model, cfg.steps, cfg.lr, cfg.bits
+    );
+    let mut tr = Trainer::new(&rt, &reg, cfg.clone())?;
+    let report = tr.train()?;
+    // final checkpoint
+    let ck = Checkpoint {
+        step: report.steps,
+        params: tr.params.clone(),
+        momentum: tr.momentum.clone(),
+    };
+    let out = Path::new(&cfg.out_dir).join(cfg.run_name());
+    let meta = ck.save(&out)?;
+    println!(
+        "[train] done: {} steps in {:.1}s ({:.2} steps/s)\n\
+         [train] train loss {:.4}, eval loss {:.4}, eval acc {:.4}{}\n\
+         [train] checkpoint -> {}",
+        report.steps,
+        report.wall_seconds,
+        report.steps_per_second,
+        report.final_train_loss,
+        report.final_eval_loss,
+        report.final_eval_acc,
+        if report.diverged { " (DIVERGED)" } else { "" },
+        meta.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
+    let model = args.flag("model").context("--model required")?.to_string();
+    let batches: u64 = args.flag_parse("batches")?.unwrap_or(16);
+    let ckpt = args.flag("ckpt").map(String::from);
+    args.check_unknown()?;
+
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open(artifacts)?;
+    let mut cfg = TrainConfig::default();
+    cfg.model = model.clone();
+    cfg.variant = "qat".into();
+    cfg.artifacts_dir = artifacts.to_string();
+    let mut tr = Trainer::new(&rt, &reg, cfg)?;
+    if let Some(p) = ckpt {
+        let ck = Checkpoint::load(Path::new(&p))?;
+        tr.params = ck.params;
+        println!("[eval] loaded checkpoint at step {}", ck.step);
+    }
+    let (loss, acc) = tr.evaluate(batches)?;
+    println!("[eval] {model}: loss {loss:.4}, acc {acc:.4} over {batches} batches");
+    Ok(())
+}
+
+fn cmd_probe(args: &Args, artifacts: &str) -> Result<()> {
+    let model = args.flag("model").context("--model required")?.to_string();
+    let variant = args.flag("variant").unwrap_or("ptq").to_string();
+    let seeds: usize = args.flag_parse("seeds")?.unwrap_or(12);
+    let warm: u64 = args.flag_parse("warm")?.unwrap_or(50);
+    let bits: Vec<f32> = args
+        .flag("bits")
+        .unwrap_or("4,5,6,7,8")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad --bits"))
+        .collect();
+    args.check_unknown()?;
+
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open(artifacts)?;
+    let mut cfg = TrainConfig::default();
+    cfg.model = model.clone();
+    cfg.artifacts_dir = artifacts.to_string();
+    cfg.out_dir = "results/runs".into();
+    let params = statquant::experiments::common::warm_params(&rt, &reg, &cfg, warm)?;
+
+    let meta = reg.meta(&model, &variant, StepKind::Probe)?;
+    let exec = rt.executor(meta)?;
+    let probe = GradVarianceProbe::new(&exec);
+    let dataset = statquant::coordinator::make_dataset(
+        &cfg,
+        &meta.input_shape,
+        if model == "transformer" { "markov" } else { "synthimg" },
+    );
+    let b = dataset.batch(99);
+    for bit in bits {
+        let rep = probe.quantization_variance(&params, &b.x, &b.y, bit, seeds, 5)?;
+        println!(
+            "{variant}@{bit}: Var_quant = {} (relative {})",
+            fmt_sig(rep.quant_variance, 4),
+            fmt_sig(rep.relative(), 4)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,228 @@
+//! Metrics sinks (S14): JSONL run logs, CSV curves, markdown tables.
+//!
+//! Every experiment binary writes through these so tables/figures can be
+//! regenerated and diffed as plain text.
+
+use std::fmt::Write as _;
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Append-only JSONL writer (one Json object per line).
+pub struct JsonlWriter {
+    path: PathBuf,
+    file: File,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl Into<PathBuf>) -> Result<Self> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let file = File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(Self { path, file })
+    }
+
+    pub fn write(&mut self, j: &Json) -> Result<()> {
+        let mut line = String::new();
+        // compact form: reuse pretty writer then strip newlines is wasteful;
+        // Json::write with pretty=false via to_string_pretty would add
+        // whitespace, so serialize compact by hand here.
+        write_compact(j, &mut line);
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+fn write_compact(j: &Json, out: &mut String) {
+    match j {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Json::Str(s) => {
+            let _ = write!(out, "{:?}", s); // rust debug-escape ~ json for ascii
+        }
+        Json::Arr(v) => {
+            out.push('[');
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(x, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{k:?}:");
+                write_compact(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl Into<PathBuf>, header: &[&str]) -> Result<Self> {
+        let path: PathBuf = path.into();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self {
+            file,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Markdown table builder — the experiment harness prints tables in the
+/// same layout as the paper's.
+pub struct MarkdownTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MarkdownTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers shared by the experiment binaries.
+pub fn fmt_sig(v: f64, digits: usize) -> String {
+    if v == 0.0 || !v.is_finite() {
+        return format!("{v}");
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{v:.dec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sq_metrics_{}", std::process::id()));
+        let path = dir.join("log.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.write(&obj([("step", Json::from(1.0)), ("loss", Json::from(2.5))]))
+            .unwrap();
+        w.write(&obj([("step", Json::from(2.0)), ("loss", Json::from(2.25))]))
+            .unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[1]).unwrap();
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(2.25));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("sq_csv_{}", std::process::id()));
+        let path = dir.join("curve.csv");
+        let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+        w.rowf(&[0.0, 2.5]).unwrap();
+        w.rowf(&[1.0, 2.0]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n0,2.5\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn markdown_table_aligns() {
+        let mut t = MarkdownTable::new(&["Setting", "PTQ", "BHQ"]);
+        t.row(vec!["8-bit".into(), "71.24".into(), "71.15".into()]);
+        let s = t.render();
+        assert!(s.contains("| Setting | PTQ   | BHQ   |"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn fmt_sig_behaviour() {
+        assert_eq!(fmt_sig(0.000123456, 3), "0.000123");
+        assert_eq!(fmt_sig(123456.0, 3), "123456");
+        assert_eq!(fmt_sig(0.0, 3), "0");
+    }
+}

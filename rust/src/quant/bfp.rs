@@ -1,0 +1,85 @@
+//! Block floating point (HBFP-style, Drumond et al. '18) — Table-2
+//! comparison format.
+//!
+//! Rows are cut into length-`block` chunks; each chunk shares a
+//! power-of-two scale chosen so its absmax fits in [-B/2, B/2], and
+//! mantissas are stochastically rounded. Power-of-two scales are what
+//! make BFP cheap in hardware (shift instead of multiply).
+
+use super::{Mat, EPS_RANGE, MAX_SCALE};
+use crate::util::rng::Pcg32;
+
+pub fn quantize(x: &Mat, nbins: f32, block: usize, rng: &mut Pcg32) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    let half = nbins / 2.0;
+    for i in 0..x.rows {
+        let src = x.row(i);
+        let dst = out.row_mut(i);
+        let mut start = 0;
+        while start < src.len() {
+            let end = (start + block).min(src.len());
+            let chunk = &src[start..end];
+            let absmax = chunk
+                .iter()
+                .fold(0.0f32, |a, &v| a.max(v.abs()))
+                .max(EPS_RANGE);
+            // largest power of two s with absmax * s <= B/2
+            let s = 2f32.powf((half / absmax).log2().floor()).min(MAX_SCALE);
+            for (o, &v) in dst[start..end].iter_mut().zip(chunk) {
+                *o = (v * s + rng.uniform()).floor() / s;
+            }
+            start = end;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_are_powers_of_two() {
+        // reconstruct the implied scale from a spike chunk and check it
+        // is a power of two: q values are integers / s.
+        let x = Mat::from_vec(1, 4, vec![3.0, 0.1, -0.2, 0.05]);
+        let mut rng = Pcg32::new(1, 1);
+        let q = quantize(&x, 255.0, 4, &mut rng);
+        // with absmax 3.0 and B/2=127.5: s = 2^floor(log2(42.5)) = 32
+        for (&qv, &_xv) in q.data.iter().zip(&x.data) {
+            let scaled = qv * 32.0;
+            assert!((scaled - scaled.round()).abs() < 1e-4, "{qv}");
+        }
+    }
+
+    #[test]
+    fn unbiased_and_bounded_error() {
+        let mut rng = Pcg32::new(2, 2);
+        let mut x = Mat::zeros(2, 128);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let reps = 2000;
+        let mut mean = vec![0.0f64; x.len()];
+        for _ in 0..reps {
+            let q = quantize(&x, 255.0, 64, &mut rng);
+            for (m, &v) in mean.iter_mut().zip(&q.data) {
+                *m += f64::from(v) / f64::from(reps);
+            }
+        }
+        for (m, &v) in mean.iter().zip(&x.data) {
+            assert!((m - f64::from(v)).abs() < 0.01, "{m} vs {v}");
+        }
+    }
+
+    #[test]
+    fn ragged_tail_block_handled() {
+        let x = Mat::from_vec(1, 5, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let mut rng = Pcg32::new(3, 3);
+        let q = quantize(&x, 255.0, 4, &mut rng);
+        assert_eq!(q.cols, 5);
+        for (&qv, &xv) in q.data.iter().zip(&x.data) {
+            assert!((qv - xv).abs() < 0.1);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! FP8 (E4M3) stochastic-rounding simulation — Table-2 comparison format
+//! (stands in for Wang et al. '18 / HFP8-style 8-bit floating point).
+//!
+//! The tensor is scaled so its absmax lands on the format's max normal,
+//! then each element is stochastically rounded to the FP8 grid: uniform
+//! steps of 2^(e - man_bits) within a binade, subnormal step 2^(emin -
+//! man_bits) near zero. Unbiased within range (floor+noise on the signed
+//! grid), saturating at the top like real FP8 hardware.
+
+use super::{Mat, EPS_RANGE};
+use crate::util::rng::Pcg32;
+
+pub const EXP_BITS: i32 = 4;
+pub const MAN_BITS: i32 = 3;
+
+pub fn max_normal() -> f32 {
+    let bias = (1 << (EXP_BITS - 1)) - 1;
+    let emax = (1 << EXP_BITS) - 2 - bias;
+    2f32.powi(emax) * (2.0 - 2f32.powi(-MAN_BITS))
+}
+
+pub fn quantize(x: &Mat, rng: &mut Pcg32) -> Mat {
+    let bias = (1 << (EXP_BITS - 1)) - 1;
+    let emax = (1 << EXP_BITS) - 2 - bias;
+    let emin = 1 - bias;
+    let maxn = max_normal();
+
+    let absmax = x
+        .data
+        .iter()
+        .fold(0.0f32, |a, &v| a.max(v.abs()))
+        .max(EPS_RANGE);
+    let s = maxn / absmax;
+
+    let mut out = Mat::zeros(x.rows, x.cols);
+    let min_step = 2f32.powi(emin - MAN_BITS);
+    for (o, &v) in out.data.iter_mut().zip(&x.data) {
+        let xs = v * s;
+        let ax = xs.abs().max(min_step);
+        let e = ax.log2().floor().clamp(emin as f32, emax as f32);
+        let step = 2f32.powf(e - MAN_BITS as f32);
+        let q = ((xs / step + rng.uniform()).floor() * step).clamp(-maxn, maxn);
+        *o = q / s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_reserved_top_max_normal_is_240() {
+        // We use the IEEE-style convention (top exponent reserved), so
+        // max normal is 2^7 * 1.875 = 240 — not OCP-E4M3's 448, which
+        // reclaims the top binade. Both sides (Rust here and
+        // python/compile/quantizers.py::fp8_sim) share this convention.
+        assert_eq!(max_normal(), 240.0);
+    }
+
+    #[test]
+    fn grid_points_fixed() {
+        // representable values are reproduced exactly (they sit on the
+        // grid so floor(x/step + u) == x/step deterministically).
+        let vals = vec![1.0f32, 1.125, 0.5, -2.0, 240.0, -240.0];
+        let x = Mat::from_vec(1, vals.len(), vals.clone());
+        let mut rng = Pcg32::new(3, 3);
+        // absmax=240 -> s=1 -> grid preserved
+        for _ in 0..50 {
+            let q = quantize(&x, &mut rng);
+            for (a, b) in q.data.iter().zip(&vals) {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_midpoint() {
+        // x halfway between two grid points must average to x.
+        let x = Mat::from_vec(1, 1, vec![1.0625f32 * 64.0]); // mid-binade at scale
+        let mut rng = Pcg32::new(5, 5);
+        let reps = 60_000;
+        let mut sum = 0.0f64;
+        for _ in 0..reps {
+            sum += f64::from(quantize(&x, &mut rng).data[0]);
+        }
+        let mean = sum / f64::from(reps);
+        let rel = (mean - f64::from(x.data[0])).abs() / f64::from(x.data[0]);
+        assert!(rel < 2e-3, "rel bias {rel}");
+    }
+
+    #[test]
+    fn relative_error_bounded_by_mantissa_step() {
+        let mut rng = Pcg32::new(7, 7);
+        let mut x = Mat::zeros(4, 64);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let q = quantize(&x, &mut rng);
+        let absmax = x.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (&qv, &xv) in q.data.iter().zip(&x.data) {
+            // error <= one grid step at that magnitude (after scaling)
+            let scale = max_normal() / absmax;
+            let ax = (xv * scale).abs().max(2f32.powi(-9));
+            let step = 2f32.powf(ax.log2().floor() - MAN_BITS as f32) / scale;
+            assert!((qv - xv).abs() <= step * 1.01, "{qv} vs {xv} step {step}");
+        }
+    }
+}

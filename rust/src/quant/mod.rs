@@ -1,0 +1,177 @@
+//! Native Rust implementations of the paper's quantizers (S11).
+//!
+//! These mirror the L2 JAX quantizers bit-for-bit in structure (same
+//! scale/zero/rounding math) and serve three roles:
+//!
+//!  1. the quantized-gradient **all-reduce** in the data-parallel
+//!     coordinator (`coordinator/data_parallel.rs`) — the L3 hot path;
+//!  2. the **Fig-4 histogram/bin tooling** (`experiments/fig4.rs`), which
+//!     needs the integer codes and bin sizes, not just dequantized values;
+//!  3. a **second implementation** cross-checked against the Python one in
+//!     integration tests (same input + same noise convention => same
+//!     statistics), which is how we validate the AOT path end to end.
+//!
+//! All gradient quantizers are *unbiased*: deterministic affine transforms
+//! composed with stochastic rounding (Theorem 1's only requirement).
+
+pub mod bfp;
+pub mod bhq;
+pub mod fp8;
+pub mod psq;
+pub mod ptq;
+pub mod sr;
+pub mod tensor;
+
+pub use tensor::Mat;
+
+use crate::util::rng::Pcg32;
+
+/// Numerical floors shared with `python/compile/quantizers.py`.
+pub const EPS_RANGE: f32 = 1e-20;
+pub const MAX_SCALE: f32 = 1e20;
+
+/// B = 2^bits - 1 quantization bins.
+pub fn nbins(bits: f32) -> f32 {
+    2f32.powf(bits) - 1.0
+}
+
+/// The gradient-quantizer family evaluated in the paper + the Table-2
+/// extension formats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GradQuantizer {
+    /// Per-tensor quantizer (§3.3) — the INT8-training baseline.
+    Ptq,
+    /// Per-sample quantizer (§4.1).
+    Psq,
+    /// Block Householder quantizer (§4.2 + Appendix D.5).
+    Bhq,
+    /// FP8 (E4M3) stochastic simulation — Table-2 comparison format.
+    Fp8,
+    /// Block floating point (HBFP-style) — Table-2 comparison format.
+    Bfp,
+}
+
+impl GradQuantizer {
+    pub const ALL: [GradQuantizer; 5] = [
+        GradQuantizer::Ptq,
+        GradQuantizer::Psq,
+        GradQuantizer::Bhq,
+        GradQuantizer::Fp8,
+        GradQuantizer::Bfp,
+    ];
+    pub const PAPER: [GradQuantizer; 3] =
+        [GradQuantizer::Ptq, GradQuantizer::Psq, GradQuantizer::Bhq];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GradQuantizer::Ptq => "ptq",
+            GradQuantizer::Psq => "psq",
+            GradQuantizer::Bhq => "bhq",
+            GradQuantizer::Fp8 => "fp8",
+            GradQuantizer::Bfp => "bfp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|q| q.name() == s)
+    }
+
+    /// Quantize-dequantize `x` at `bits`, drawing SR noise from `rng`.
+    pub fn apply(self, x: &Mat, bits: f32, rng: &mut Pcg32) -> Mat {
+        let b = nbins(bits);
+        match self {
+            GradQuantizer::Ptq => ptq::quantize(x, b, rng).deq,
+            GradQuantizer::Psq => psq::quantize(x, b, rng).deq,
+            GradQuantizer::Bhq => bhq::quantize(x, b, rng).deq,
+            GradQuantizer::Fp8 => fp8::quantize(x, rng),
+            GradQuantizer::Bfp => bfp::quantize(x, b, 64, rng),
+        }
+    }
+}
+
+/// Output of an affine quantizer: integer codes, dequantized values, and
+/// the per-row bin sizes (1/scale) the Fig-4 analysis plots.
+pub struct Quantized {
+    pub codes: Mat,
+    pub deq: Mat,
+    /// Effective numeric width of one quantization bin, per row, in the
+    /// *original* (untransformed) gradient units.
+    pub row_bin_size: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outlier_matrix(n: usize, d: usize, seed: u64) -> Mat {
+        // One huge row + tiny rest: the gradient structure of §4.2.
+        let mut rng = Pcg32::new(seed, 0);
+        let mut m = Mat::zeros(n, d);
+        for i in 0..n {
+            let s = if i == 0 { 10.0 } else { 0.01 };
+            for v in m.row_mut(i) {
+                *v = rng.normal() * s;
+            }
+        }
+        m
+    }
+
+    /// Empirical unbiasedness + the paper's variance ordering
+    /// Var[PTQ] > Var[PSQ] > Var[BHQ] on outlier-structured gradients.
+    #[test]
+    fn variance_ordering_and_unbiasedness() {
+        let x = outlier_matrix(16, 32, 7);
+        let bits = 4.0;
+        let reps = 400;
+        let mut var = std::collections::HashMap::new();
+        for q in GradQuantizer::PAPER {
+            let mut mean = vec![0.0f64; x.len()];
+            let mut sq = 0.0f64;
+            let mut rng = Pcg32::new(123, 9);
+            for _ in 0..reps {
+                let out = q.apply(&x, bits, &mut rng);
+                sq += out.sq_err(&x);
+                for (m, &v) in mean.iter_mut().zip(&out.data) {
+                    *m += f64::from(v) / f64::from(reps as u32);
+                }
+            }
+            let bias: f64 = mean
+                .iter()
+                .zip(&x.data)
+                .map(|(&m, &v)| (m - f64::from(v)).abs())
+                .fold(0.0, f64::max);
+            // max-abs bias must be within a few empirical std errors
+            assert!(bias < 0.5, "{q:?} biased: {bias}");
+            var.insert(q.name(), sq / f64::from(reps as u32));
+        }
+        assert!(var["ptq"] > 3.0 * var["psq"], "{var:?}");
+        assert!(var["psq"] > 2.0 * var["bhq"], "{var:?}");
+    }
+
+    /// Each fewer bit multiplies PTQ variance by ~4 (Eq. 10 discussion).
+    /// Uses iid data: the law assumes incoherent rounding phases, which a
+    /// coherent near-zero cluster (the outlier structure) violates —
+    /// that regime is exactly where PSQ/BHQ win instead.
+    #[test]
+    fn four_x_variance_per_bit() {
+        let mut rng0 = Pcg32::new(3, 5);
+        let mut x = Mat::zeros(8, 64);
+        for v in &mut x.data {
+            *v = rng0.normal();
+        }
+        let reps = 300;
+        let mut vars = Vec::new();
+        for bits in [4.0f32, 5.0, 6.0] {
+            let mut rng = Pcg32::new(5, 1);
+            let mut sq = 0.0;
+            for _ in 0..reps {
+                sq += GradQuantizer::Ptq.apply(&x, bits, &mut rng).sq_err(&x);
+            }
+            vars.push(sq / f64::from(reps as u32));
+        }
+        for w in vars.windows(2) {
+            let ratio = w[0] / w[1];
+            assert!((2.5..6.0).contains(&ratio), "ratio {ratio} vars {vars:?}");
+        }
+    }
+}

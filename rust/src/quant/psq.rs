@@ -1,0 +1,133 @@
+//! Per-sample quantizer (paper §4.1).
+//!
+//! Scale matrix S = diag(s_1..s_N) with s_i = B / R(x_i), zero point
+//! z_i = min(x_i): every sample (row) gets its own affine map, so a
+//! correctly-classified sample with near-zero gradient range gets tiny
+//! bins instead of inheriting the batch outlier's huge ones. Variance
+//! bound: D/(4B^2) * sum_i R(x_i)^2 <= the PTQ bound (Eq. 9) since
+//! R(X) = max_i R(x_i). O(N*D) FP32 overhead, same as FBGEMM's row-wise
+//! path.
+
+use super::{Mat, Quantized, EPS_RANGE, MAX_SCALE};
+use crate::quant::sr;
+use crate::util::rng::Pcg32;
+
+pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
+    let mm = x.row_minmax();
+    let mut codes = Mat::zeros(x.rows, x.cols);
+    let mut deq = Mat::zeros(x.rows, x.cols);
+    let mut bins = Vec::with_capacity(x.rows);
+    for i in 0..x.rows {
+        let (lo, hi) = mm[i];
+        let range = (hi - lo).max(EPS_RANGE);
+        let scale = (nbins / range).min(MAX_SCALE);
+        bins.push(1.0 / scale);
+        let src = x.row(i);
+        let crow = codes.row_mut(i);
+        for j in 0..src.len() {
+            let t = scale * (src[j] - lo);
+            crow[j] = sr::sr(t, rng).clamp(0.0, nbins);
+        }
+        let drow = deq.row_mut(i);
+        let crow = codes.row(i);
+        for j in 0..drow.len() {
+            drow[j] = crow[j] / scale + lo;
+        }
+    }
+    Quantized {
+        codes,
+        deq,
+        row_bin_size: bins,
+    }
+}
+
+/// §4.1 bound: D/(4B^2) * sum_i R(x_i)^2.
+pub fn variance_bound(x: &Mat, nbins: f32) -> f64 {
+    let sum_r2: f64 = x
+        .row_minmax()
+        .iter()
+        .map(|&(lo, hi)| f64::from(hi - lo).powi(2))
+        .sum();
+    x.cols as f64 / (4.0 * f64::from(nbins).powi(2)) * sum_r2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ptq;
+
+    fn skewed(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg32::new(seed, 0);
+        let mut m = Mat::zeros(n, d);
+        for i in 0..n {
+            let s = if i == 0 { 5.0 } else { 0.02 };
+            for v in m.row_mut(i) {
+                *v = rng.normal() * s;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn bound_no_larger_than_ptq_bound() {
+        let x = skewed(16, 24, 2);
+        let b = 15.0;
+        assert!(psq_bound_le_ptq(&x, b));
+        // and on iid data too (bounds equal only if all rows share range)
+        let mut rng = Pcg32::new(3, 0);
+        let mut y = Mat::zeros(8, 8);
+        for v in &mut y.data {
+            *v = rng.normal();
+        }
+        assert!(psq_bound_le_ptq(&y, b));
+    }
+
+    fn psq_bound_le_ptq(x: &Mat, b: f32) -> bool {
+        variance_bound(x, b) <= ptq::variance_bound(x, b) + 1e-9
+    }
+
+    #[test]
+    fn per_row_reconstruction_error_bounded_by_row_bin() {
+        let x = skewed(8, 32, 5);
+        let mut rng = Pcg32::new(6, 6);
+        let q = quantize(&x, 15.0, &mut rng);
+        for i in 0..x.rows {
+            let bin = q.row_bin_size[i];
+            for (d, v) in q.deq.row(i).iter().zip(x.row(i)) {
+                assert!((d - v).abs() <= bin * 1.001);
+            }
+        }
+        // outlier row got a much larger bin than the quiet rows
+        assert!(q.row_bin_size[0] > 50.0 * q.row_bin_size[3]);
+    }
+
+    #[test]
+    fn empirical_variance_below_bound_and_below_ptq() {
+        let x = skewed(12, 16, 9);
+        let b = 15.0;
+        let reps = 400;
+        let mut rng = Pcg32::new(10, 0);
+        let (mut vp, mut vs) = (0.0f64, 0.0f64);
+        for _ in 0..reps {
+            vp += ptq::quantize(&x, b, &mut rng).deq.sq_err(&x);
+            vs += quantize(&x, b, &mut rng).deq.sq_err(&x);
+        }
+        vp /= f64::from(reps);
+        vs /= f64::from(reps);
+        assert!(vs <= variance_bound(&x, b));
+        assert!(vs < vp, "psq {vs} !< ptq {vp}");
+    }
+
+    #[test]
+    fn zero_rows_reproduced_exactly() {
+        let mut x = skewed(4, 8, 1);
+        for v in x.row_mut(2) {
+            *v = 0.0;
+        }
+        let mut rng = Pcg32::new(2, 2);
+        let q = quantize(&x, 15.0, &mut rng);
+        for &d in q.deq.row(2) {
+            assert_eq!(d, 0.0);
+        }
+    }
+}

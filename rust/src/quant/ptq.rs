@@ -1,0 +1,120 @@
+//! Per-tensor quantizer (paper §3.3) — the INT8-training baseline
+//! [Banner et al. '18, Zhu et al. '20].
+//!
+//! One scale S = B / R(X) and one zero point Z = min(X) for the whole
+//! tensor. Variance bound (Eq. 9): Var <= N*D/(4B^2) * R(X)^2 — a single
+//! outlier row inflates the bin size for *every* row, which is exactly
+//! the failure mode PSQ/BHQ repair.
+
+use super::{Mat, Quantized, EPS_RANGE, MAX_SCALE};
+use crate::quant::sr;
+use crate::util::rng::Pcg32;
+
+/// Stochastic PTQ quantize-dequantize with `nbins` = B bins.
+pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
+    let (lo, hi) = x.minmax();
+    let range = (hi - lo).max(EPS_RANGE);
+    let scale = (nbins / range).min(MAX_SCALE);
+    let mut codes = Mat::zeros(x.rows, x.cols);
+    let mut deq = Mat::zeros(x.rows, x.cols);
+    for ((c, d), &v) in codes
+        .data
+        .iter_mut()
+        .zip(deq.data.iter_mut())
+        .zip(&x.data)
+    {
+        let t = scale * (v - lo);
+        let q = sr::sr(t, rng).clamp(0.0, nbins);
+        *c = q;
+        *d = q / scale + lo;
+    }
+    Quantized {
+        codes,
+        deq,
+        row_bin_size: vec![1.0 / scale; x.rows],
+    }
+}
+
+/// Deterministic round-to-nearest PTQ (the forward-path Q_f / Q_theta).
+pub fn quantize_det(x: &Mat, nbins: f32) -> Mat {
+    let (lo, hi) = x.minmax();
+    let range = (hi - lo).max(EPS_RANGE);
+    let scale = (nbins / range).min(MAX_SCALE);
+    let mut deq = Mat::zeros(x.rows, x.cols);
+    for (d, &v) in deq.data.iter_mut().zip(&x.data) {
+        let q = (scale * (v - lo)).round().clamp(0.0, nbins);
+        *d = q / scale + lo;
+    }
+    deq
+}
+
+/// Eq. (9) upper bound: N*D/(4B^2) * R(X)^2.
+pub fn variance_bound(x: &Mat, nbins: f32) -> f64 {
+    let (lo, hi) = x.minmax();
+    let r = f64::from(hi - lo);
+    (x.rows * x.cols) as f64 / (4.0 * f64::from(nbins).powi(2)) * r * r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_in_range_and_reconstruction_close() {
+        let mut rng = Pcg32::new(4, 4);
+        let mut x = Mat::zeros(8, 16);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let b = 255.0;
+        let q = quantize(&x, b, &mut rng);
+        for &c in &q.codes.data {
+            assert!((0.0..=b).contains(&c) && c.fract() == 0.0);
+        }
+        // |deq - x| <= bin size elementwise (SR moves at most one bin)
+        let bin = q.row_bin_size[0];
+        for (&d, &v) in q.deq.data.iter().zip(&x.data) {
+            assert!((d - v).abs() <= bin * 1.001, "{d} vs {v} bin {bin}");
+        }
+    }
+
+    #[test]
+    fn empirical_variance_below_bound() {
+        let mut rng = Pcg32::new(8, 8);
+        let mut x = Mat::zeros(4, 32);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let b = 15.0; // 4-bit
+        let bound = variance_bound(&x, b);
+        let reps = 500;
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            acc += quantize(&x, b, &mut rng).deq.sq_err(&x);
+        }
+        let emp = acc / f64::from(reps);
+        assert!(emp <= bound, "emp {emp} bound {bound}");
+    }
+
+    #[test]
+    fn det_is_deterministic_and_within_half_bin() {
+        let x = Mat::from_vec(2, 3, vec![0.0, 0.3, 1.0, -1.0, 0.5, 0.9]);
+        let a = quantize_det(&x, 255.0);
+        let b = quantize_det(&x, 255.0);
+        assert_eq!(a, b);
+        let bin = 2.0 / 255.0; // range = 2
+        for (&d, &v) in a.data.iter().zip(&x.data) {
+            assert!((d - v).abs() <= bin / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_tensor_is_exact() {
+        let x = Mat::from_vec(3, 3, vec![2.5; 9]);
+        let mut rng = Pcg32::new(1, 1);
+        let q = quantize(&x, 15.0, &mut rng);
+        for &d in &q.deq.data {
+            assert!((d - 2.5).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Stochastic rounding — the unbiased rounding primitive (paper §3.3).
+//!
+//! SR(x) = ceil(x) w.p. x - floor(x), else floor(x); implemented as
+//! floor(x + u), u ~ U[0,1). E[SR(x)] = x and Var[SR(x)] = p(1-p) <= 1/4
+//! (Proposition 4) — the 1/4 is what every variance bound in the paper
+//! inherits its 1/(4B^2) factor from.
+
+use crate::util::rng::Pcg32;
+
+/// Stochastically round one value (already scaled to bin units).
+#[inline]
+pub fn sr(x: f32, rng: &mut Pcg32) -> f32 {
+    (x + rng.uniform()).floor()
+}
+
+/// Stochastically round a slice in place, clipping codes to [0, nbins].
+#[inline]
+pub fn sr_clip_slice(xs: &mut [f32], nbins: f32, rng: &mut Pcg32) {
+    for x in xs {
+        *x = (*x + rng.uniform()).floor().clamp(0.0, nbins);
+    }
+}
+
+/// Exact SR variance of a scaled tensor: sum over elements of p(1-p)
+/// where p = frac(x). Used by tests and the Fig-3 variance analysis to
+/// compare empirical variance against the closed form.
+pub fn sr_exact_variance(scaled: &[f32]) -> f64 {
+    scaled
+        .iter()
+        .map(|&t| {
+            let p = f64::from(t) - f64::from(t.floor());
+            p * (1.0 - p)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_and_quarter_variance_at_half() {
+        let mut rng = Pcg32::new(1, 2);
+        let n = 200_000;
+        let x = 3.5f32;
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for _ in 0..n {
+            let v = f64::from(sr(x, &mut rng));
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / f64::from(n);
+        let var = sq / f64::from(n) - mean * mean;
+        assert!((mean - 3.5).abs() < 0.005, "mean {mean}");
+        assert!((var - 0.25).abs() < 0.005, "var {var}"); // p(1-p)=1/4
+    }
+
+    #[test]
+    fn integers_are_exact() {
+        let mut rng = Pcg32::new(2, 2);
+        for x in [0.0f32, 1.0, 17.0, 255.0] {
+            for _ in 0..100 {
+                assert_eq!(sr(x, &mut rng), x);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_variance_formula_matches_empirical() {
+        let scaled = vec![0.25f32, 1.9, 7.5, 3.0];
+        let exact = sr_exact_variance(&scaled);
+        let mut rng = Pcg32::new(9, 0);
+        let reps = 100_000;
+        let mut acc = 0.0f64;
+        for _ in 0..reps {
+            for &t in &scaled {
+                let d = f64::from(sr(t, &mut rng)) - f64::from(t);
+                acc += d * d;
+            }
+        }
+        let emp = acc / f64::from(reps);
+        assert!(
+            (emp - exact).abs() < 0.01 * exact.max(0.1),
+            "emp {emp} exact {exact}"
+        );
+    }
+
+    #[test]
+    fn clip_respects_bounds() {
+        let mut rng = Pcg32::new(3, 1);
+        let mut xs = vec![-0.4f32, 0.2, 254.9, 255.0, 300.0];
+        sr_clip_slice(&mut xs, 255.0, &mut rng);
+        for &v in &xs {
+            assert!((0.0..=255.0).contains(&v), "{v}");
+            assert_eq!(v.fract(), 0.0);
+        }
+    }
+}

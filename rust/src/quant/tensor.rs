@@ -1,0 +1,158 @@
+//! Row-major f32 matrix used throughout the native quantizer stack.
+//!
+//! Deliberately tiny: the coordinator's tensors are gradients and
+//! parameter vectors that shuttle between PJRT literals and the native
+//! quantizers — not a general linear-algebra library. Hot operations
+//! (row reductions, axpy) are written to autovectorize.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, Vec::len);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self {
+            rows: r,
+            cols: c,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// (min, max) of the whole tensor. Empty -> (0, 0).
+    pub fn minmax(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Per-row (min, max).
+    pub fn row_minmax(&self) -> Vec<(f32, f32)> {
+        (0..self.rows)
+            .map(|i| {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for &v in self.row(i) {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                if lo > hi {
+                    (0.0, 0.0)
+                } else {
+                    (lo, hi)
+                }
+            })
+            .collect()
+    }
+
+    /// Per-row infinity norm |row|_inf (the BHQ magnitude key).
+    pub fn row_absmax(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+            .collect()
+    }
+
+    /// Frobenius norm squared.
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| f64::from(v) * f64::from(v)).sum()
+    }
+
+    /// Elementwise sum of squared differences (f64 accumulator).
+    pub fn sq_err(&self, other: &Mat) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = f64::from(a) - f64::from(b);
+                d * d
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_and_rows() {
+        let m = Mat::from_vec(2, 3, vec![1.0, -2.0, 3.0, 0.0, 5.0, -1.0]);
+        assert_eq!(m.minmax(), (-2.0, 5.0));
+        assert_eq!(m.row_minmax(), vec![(-2.0, 3.0), (-1.0, 5.0)]);
+        assert_eq!(m.row_absmax(), vec![3.0, 5.0]);
+        assert_eq!(m.at(1, 1), 5.0);
+    }
+
+    #[test]
+    fn from_rows_matches_from_vec() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sq_err_zero_on_self() {
+        let m = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.sq_err(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        Mat::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,287 @@
+//! Artifact metadata + registry.
+//!
+//! `python/compile/aot.py` writes, per artifact, an `.hlo.txt` module and
+//! a `.json` sidecar describing the ABI (input/output shapes + dtypes,
+//! parameter count, model config). The [`Registry`] discovers artifacts,
+//! validates sidecars, and hands compiled executables to the coordinator,
+//! caching one executable per (model, variant, step).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// The four step-function kinds emitted by aot.py (DESIGN.md §2 ABI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    Train,
+    Probe,
+    Eval,
+    ActGrad,
+}
+
+impl StepKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StepKind::Train => "train",
+            StepKind::Probe => "probe",
+            StepKind::Eval => "eval",
+            StepKind::ActGrad => "actgrad",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "train" => Some(StepKind::Train),
+            "probe" => Some(StepKind::Probe),
+            "eval" => Some(StepKind::Eval),
+            "actgrad" => Some(StepKind::ActGrad),
+            _ => None,
+        }
+    }
+}
+
+/// Shape + dtype of one ABI tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing dtype"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// Parsed sidecar for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub variant: String,
+    pub step: StepKind,
+    pub n_params: usize,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub probe_shape: Vec<usize>,
+    pub momentum: f64,
+    pub hlo_path: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn parse(json_path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(json_path)
+            .with_context(|| format!("reading {}", json_path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", json_path.display()))?;
+        let get_str = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing {k}"))?
+                .to_string())
+        };
+        let get_num = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {k}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let dims = |k: &str| -> Result<Vec<usize>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {k}"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        };
+        let step_name = get_str("step")?;
+        let step = StepKind::from_name(&step_name)
+            .ok_or_else(|| anyhow!("unknown step kind {step_name}"))?;
+        let hlo_path = json_path.with_extension("").with_extension("hlo.txt");
+        Ok(Self {
+            model: get_str("model")?,
+            variant: get_str("variant")?,
+            step,
+            n_params: get_num("n_params")?,
+            batch: get_num("batch")?,
+            input_shape: dims("input_shape")?,
+            input_dtype: get_str("input_dtype")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            probe_shape: dims("probe_shape")?,
+            momentum: j
+                .get("momentum")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.9),
+            hlo_path,
+        })
+    }
+
+    pub fn key(&self) -> String {
+        format!("{}_{}_{}", self.model, self.variant, self.step.name())
+    }
+}
+
+/// Discovers artifacts in a directory and caches compiled executables.
+pub struct Registry {
+    pub dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    inits: HashMap<String, PathBuf>,
+}
+
+impl Registry {
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            bail!(
+                "artifact dir {} missing — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let mut metas = HashMap::new();
+        let mut inits = HashMap::new();
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let name = path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default()
+                .to_string();
+            if name.ends_with(".json") && name != "manifest.json" {
+                let meta = ArtifactMeta::parse(&path)
+                    .with_context(|| format!("bad sidecar {name}"))?;
+                metas.insert(meta.key(), meta);
+            } else if let Some(model) = name.strip_suffix("_init.bin") {
+                inits.insert(model.to_string(), path);
+            }
+        }
+        Ok(Self { dir, metas, inits })
+    }
+
+    pub fn meta(&self, model: &str, variant: &str, step: StepKind) -> Result<&ArtifactMeta> {
+        let key = format!("{model}_{variant}_{}", step.name());
+        self.metas.get(&key).ok_or_else(|| {
+            anyhow!(
+                "artifact {key} not found in {} (have: {:?})",
+                self.dir.display(),
+                {
+                    let mut keys: Vec<_> = self.metas.keys().collect();
+                    keys.sort();
+                    keys
+                }
+            )
+        })
+    }
+
+    pub fn keys(&self) -> Vec<&str> {
+        self.metas.keys().map(String::as_str).collect()
+    }
+
+    /// Load the f32-LE initial parameter vector written by aot.py.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let path = self
+            .inits
+            .get(model)
+            .ok_or_else(|| anyhow!("no init params for model {model}"))?;
+        let bytes = std::fs::read(path)?;
+        if bytes.len() % 4 != 0 {
+            bail!("init file {} not a multiple of 4 bytes", path.display());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.inits.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_kind_roundtrip() {
+        for k in [
+            StepKind::Train,
+            StepKind::Probe,
+            StepKind::Eval,
+            StepKind::ActGrad,
+        ] {
+            assert_eq!(StepKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(StepKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn tensor_spec_numel() {
+        let t = TensorSpec {
+            shape: vec![4, 8, 2],
+            dtype: "float32".into(),
+        };
+        assert_eq!(t.numel(), 64);
+        let scalar = TensorSpec {
+            shape: vec![],
+            dtype: "float32".into(),
+        };
+        assert_eq!(scalar.numel(), 1);
+    }
+
+    #[test]
+    fn parse_sidecar_from_tempfile() {
+        let dir = std::env::temp_dir().join(format!("sq_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sidecar = dir.join("mlp_ptq_train.json");
+        std::fs::write(
+            &sidecar,
+            r#"{"model":"mlp","variant":"ptq","step":"train","n_params":10,
+               "batch":4,"input_shape":[4,8],"input_dtype":"f32",
+               "inputs":[{"shape":[10],"dtype":"float32"}],
+               "outputs":[{"shape":[10],"dtype":"float32"}],
+               "probe_shape":[4,16],"momentum":0.9}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("mlp_init.bin"), 1f32.to_le_bytes()).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let meta = reg.meta("mlp", "ptq", StepKind::Train).unwrap();
+        assert_eq!(meta.n_params, 10);
+        assert_eq!(meta.hlo_path.file_name().unwrap(), "mlp_ptq_train.hlo.txt");
+        assert_eq!(reg.init_params("mlp").unwrap(), vec![1.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Registry::open("/nonexistent/path/xyz").is_err());
+    }
+}

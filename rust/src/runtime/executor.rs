@@ -1,0 +1,176 @@
+//! Executable wrapper: HLO text -> PJRT compile -> validated execute.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::ArtifactMeta;
+use super::Runtime;
+
+/// Host-side tensor crossing the ABI.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        if shape.is_empty() {
+            // rank-0 scalar
+            return Ok(match self {
+                HostTensor::F32(v) => xla::Literal::scalar(v[0]),
+                HostTensor::I32(v) => xla::Literal::scalar(v[0]),
+            });
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        if shape.len() == 1 && lit.element_count() == shape[0] {
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        use xla::ElementType;
+        match lit.ty()? {
+            ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?)),
+            ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?)),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Outputs of one step execution, in ABI order.
+pub type StepOutputs = Vec<HostTensor>;
+
+/// One compiled artifact, ready to execute.
+pub struct Executor {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Load the artifact's HLO text and compile it on the PJRT client.
+    pub fn load(rt: &Runtime, meta: &ArtifactMeta) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
+            .with_context(|| format!("loading {}", meta.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt
+            .client()
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", meta.key()))?;
+        Ok(Self {
+            meta: meta.clone(),
+            exe,
+        })
+    }
+
+    /// Execute with validated inputs; returns decomposed tuple outputs.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<StepOutputs> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.key(),
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.len() != spec.numel() {
+                bail!(
+                    "{} input {i}: expected {} elements {:?}, got {}",
+                    self.meta.key(),
+                    spec.numel(),
+                    spec.shape,
+                    t.len()
+                );
+            }
+            let want_i32 = spec.dtype.starts_with("int");
+            let is_i32 = matches!(t, HostTensor::I32(_));
+            if want_i32 != is_i32 {
+                bail!(
+                    "{} input {i}: dtype mismatch (artifact wants {}, got {})",
+                    self.meta.key(),
+                    spec.dtype,
+                    if is_i32 { "i32" } else { "f32" }
+                );
+            }
+            lits.push(t.to_literal(&spec.shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.key(),
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let f = HostTensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.len(), 2);
+        assert!(f.as_f32().is_ok());
+        let i = HostTensor::I32(vec![1, 2, 3]);
+        assert_eq!(i.len(), 3);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal(&[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_scalar_shape() {
+        let t = HostTensor::F32(vec![7.5]);
+        let lit = t.to_literal(&[]).unwrap();
+        assert_eq!(lit.element_count(), 1);
+    }
+}

@@ -1,0 +1,74 @@
+//! PJRT runtime (S7): load AOT artifacts, validate their ABI metadata,
+//! compile once, execute many times from the L3 hot loop.
+//!
+//! Interchange is HLO *text* (see DESIGN.md §2): jax >= 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Python never runs at request time — the Rust
+//! binary is self-contained once `make artifacts` has populated
+//! `artifacts/`.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Registry, StepKind, TensorSpec};
+pub use executor::{Executor, HostTensor, StepOutputs};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client + executable cache. One per process; XLA
+/// compilation of an artifact is paid once per (model, variant, step)
+/// even across many experiment runs (the Table-1 sweep reuses one
+/// compiled train step for all bitwidths — `bits` is a runtime input).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Arc<Executor>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load-or-reuse the compiled executable for an artifact.
+    pub fn executor(&self, meta: &ArtifactMeta) -> Result<Arc<Executor>> {
+        let key = meta.key();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let exec = Arc::new(Executor::load(self, meta)?);
+        eprintln!(
+            "[runtime] compiled {key} in {:.1}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.borrow_mut().insert(key, exec.clone());
+        Ok(exec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().expect("pjrt cpu client");
+        assert_eq!(rt.platform(), "cpu");
+    }
+}

@@ -1,0 +1,149 @@
+//! Histograms for the Fig-4 experiment: quantized-code utilization and
+//! bin-size distributions, plus generic value histograms for gradients.
+
+/// Fixed-range histogram over f32 values.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo, "bad histogram spec");
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    /// Build with range from the data itself.
+    pub fn from_values(values: &[f32], bins: usize) -> Self {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in values {
+            lo = lo.min(f64::from(v));
+            hi = hi.max(f64::from(v));
+        }
+        if !lo.is_finite() || lo == hi {
+            lo = 0.0;
+            hi = 1.0;
+        }
+        let mut h = Self::new(lo, hi + (hi - lo) * 1e-9, bins);
+        for &v in values {
+            h.push(f64::from(v));
+        }
+        h
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((v - self.lo) / (self.hi - self.lo) * self.counts.len() as f64)
+                as usize;
+            let idx = idx.min(self.counts.len() - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Fraction of bins with at least one sample — the paper's Fig-4
+    /// "utilization of quantization bins" notion.
+    pub fn utilization(&self) -> f64 {
+        let used = self.counts.iter().filter(|&&c| c > 0).count();
+        used as f64 / self.counts.len() as f64
+    }
+
+    /// Shannon entropy of the bin distribution in bits (higher = flatter
+    /// histogram = better code utilization; PTQ's zero-spike scores low).
+    pub fn entropy_bits(&self) -> f64 {
+        let n: u64 = self.counts.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let n = n as f64;
+        -self
+            .counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                p * p.log2()
+            })
+            .sum::<f64>()
+    }
+
+    /// CSV rows "bin_center,count".
+    pub fn to_csv(&self) -> String {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut out = String::from("bin_center,count\n");
+        for (i, &c) in self.counts.iter().enumerate() {
+            out.push_str(&format!("{},{}\n", self.lo + (i as f64 + 0.5) * w, c));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for v in [0.5, 1.5, 1.7, 9.9, -1.0, 10.0, 11.0] {
+            h.push(v);
+        }
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.total(), 7);
+    }
+
+    #[test]
+    fn from_values_covers_all() {
+        let vals: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let h = Histogram::from_values(&vals, 10);
+        assert_eq!(h.underflow + h.overflow, 0);
+        assert_eq!(h.total(), 100);
+        assert!((h.utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_spike_vs_flat() {
+        // all mass in one bin -> entropy 0; uniform -> log2(bins)
+        let spike = Histogram::from_values(&vec![0.5f32; 1000], 16);
+        assert!(spike.entropy_bits() < 1e-9);
+        let flat_vals: Vec<f32> = (0..1600).map(|i| (i % 16) as f32).collect();
+        let flat = Histogram::from_values(&flat_vals, 16);
+        assert!((flat.entropy_bits() - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn constant_values_dont_panic() {
+        let h = Histogram::from_values(&[2.0f32; 5], 4);
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let h = Histogram::from_values(&[0.0, 1.0, 2.0, 3.0], 4);
+        let csv = h.to_csv();
+        assert!(csv.starts_with("bin_center,count\n"));
+        assert_eq!(csv.lines().count(), 5);
+    }
+}

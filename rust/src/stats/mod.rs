@@ -1,0 +1,10 @@
+//! Statistics engine (S10): streaming variance estimation, histograms,
+//! and the gradient-variance decomposition experiments of Fig 3 / Fig 5.
+
+pub mod histogram;
+pub mod variance;
+pub mod welford;
+
+pub use histogram::Histogram;
+pub use variance::{GradVarianceProbe, VarianceReport};
+pub use welford::{VectorWelford, Welford};

@@ -1,0 +1,155 @@
+//! Gradient-variance probes — the measurement machinery behind Fig 3(a),
+//! Fig 5(a) and the Thm-1/Eq-10 validation experiments.
+//!
+//! The paper decomposes Var[FQT grad] = Var[QAT grad] + quantization
+//! variance (Theorem 2 / law of total variance). We estimate both terms
+//! empirically with the `probe` artifacts:
+//!
+//!  * **quantization variance** E[Var[ĝ | B]]: fix a batch, run the FQT
+//!    probe with K different seeds, Welford over the flat gradients;
+//!  * **QAT (subsampling) variance** Var[∇]: run the QAT probe (exact
+//!    deterministic backward of the quantized model) over K different
+//!    batches, Welford across batches.
+
+use anyhow::Result;
+
+use super::welford::VectorWelford;
+use crate::runtime::{Executor, HostTensor};
+
+/// One measured point of the Fig-3(a)/Fig-5(a) curves.
+#[derive(Clone, Debug)]
+pub struct VarianceReport {
+    pub variant: String,
+    pub bits: f32,
+    /// E[Var[grad | batch]] — variance injected by gradient quantization.
+    pub quant_variance: f64,
+    /// ||E[grad | batch]||^2 — scale reference for relative variance.
+    pub mean_sq_norm: f64,
+    pub seeds: usize,
+}
+
+impl VarianceReport {
+    /// Quantization variance relative to the squared gradient norm.
+    pub fn relative(&self) -> f64 {
+        self.quant_variance / self.mean_sq_norm.max(1e-30)
+    }
+}
+
+/// Probe driver over a `probe` artifact:
+/// inputs (params, x, y, seed, bits) -> (loss, flat_grad).
+pub struct GradVarianceProbe<'a> {
+    pub exec: &'a Executor,
+}
+
+impl<'a> GradVarianceProbe<'a> {
+    pub fn new(exec: &'a Executor) -> Self {
+        Self { exec }
+    }
+
+    fn run_once(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &HostTensor,
+        seed: f32,
+        bits: f32,
+    ) -> Result<Vec<f32>> {
+        let inputs = [
+            HostTensor::F32(params.to_vec()),
+            x.clone(),
+            y.clone(),
+            HostTensor::F32(vec![seed]),
+            HostTensor::F32(vec![bits]),
+        ];
+        let out = self.exec.run(&inputs)?;
+        // outputs: (loss, grad)
+        out.into_iter()
+            .nth(1)
+            .expect("probe returns (loss, grad)")
+            .into_f32()
+    }
+
+    /// Quantization variance on a fixed batch across `seeds` SR draws.
+    pub fn quantization_variance(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &HostTensor,
+        bits: f32,
+        seeds: usize,
+        seed0: u32,
+    ) -> Result<VarianceReport> {
+        let mut vw = VectorWelford::new(self.exec.meta.n_params);
+        for k in 0..seeds {
+            let g = self.run_once(params, x, y, (seed0 + k as u32) as f32, bits)?;
+            vw.push(&g);
+        }
+        Ok(VarianceReport {
+            variant: self.exec.meta.variant.clone(),
+            bits,
+            quant_variance: vw.total_variance(),
+            mean_sq_norm: vw.mean_sq_norm(),
+            seeds,
+        })
+    }
+
+    /// Mean gradient over `seeds` draws on a fixed batch (Thm-1 check:
+    /// should converge to the QAT gradient). Returns the per-coordinate
+    /// Monte-Carlo variances alongside, so callers can form exact
+    /// per-coordinate z-scores.
+    pub fn mean_gradient(
+        &self,
+        params: &[f32],
+        x: &HostTensor,
+        y: &HostTensor,
+        bits: f32,
+        seeds: usize,
+        seed0: u32,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let mut vw = VectorWelford::new(self.exec.meta.n_params);
+        for k in 0..seeds {
+            let g = self.run_once(params, x, y, (seed0 + k as u32) as f32, bits)?;
+            vw.push(&g);
+        }
+        Ok((vw.mean().to_vec(), vw.coordinate_variances()))
+    }
+
+    /// Subsampling variance: one probe call per batch (deterministic QAT
+    /// probes ignore the seed), Welford across batches.
+    pub fn batch_variance(
+        &self,
+        params: &[f32],
+        batches: &[(HostTensor, HostTensor)],
+        bits: f32,
+    ) -> Result<VarianceReport> {
+        let mut vw = VectorWelford::new(self.exec.meta.n_params);
+        for (i, (x, y)) in batches.iter().enumerate() {
+            let g = self.run_once(params, x, y, i as f32, bits)?;
+            vw.push(&g);
+        }
+        Ok(VarianceReport {
+            variant: self.exec.meta.variant.clone(),
+            bits,
+            quant_variance: vw.total_variance(),
+            mean_sq_norm: vw.mean_sq_norm(),
+            seeds: batches.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_variance_guards_zero_norm() {
+        let r = VarianceReport {
+            variant: "ptq".into(),
+            bits: 4.0,
+            quant_variance: 1.0,
+            mean_sq_norm: 0.0,
+            seeds: 8,
+        };
+        assert!(r.relative().is_finite());
+    }
+}

@@ -1,0 +1,246 @@
+//! Welford's online mean/variance — numerically stable single-pass
+//! estimators, scalar and vectorized.
+//!
+//! The vector form is the workhorse of the Fig-3/Fig-5 experiments: the
+//! probe artifact returns the flat parameter gradient, the coordinator
+//! feeds K seeds worth of gradients in, and `total_variance()` yields
+//! Var[grad] = E||g - Eg||^2 — the paper's Definition in §3.2 (sum of
+//! per-coordinate variances).
+
+/// Scalar Welford accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (σ², divides by n).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Unbiased sample variance (divides by n-1).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.sample_variance() / self.n as f64).sqrt()
+        }
+    }
+
+    /// Merge two accumulators (parallel reduction; Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean += d * other.n as f64 / n;
+        self.n += other.n;
+    }
+}
+
+/// Per-coordinate Welford over f32 vectors of fixed length.
+#[derive(Clone, Debug)]
+pub struct VectorWelford {
+    n: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl VectorWelford {
+    pub fn new(len: usize) -> Self {
+        Self {
+            n: 0,
+            mean: vec![0.0; len],
+            m2: vec![0.0; len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn push(&mut self, xs: &[f32]) {
+        assert_eq!(xs.len(), self.mean.len(), "dimension mismatch");
+        self.n += 1;
+        let inv_n = 1.0 / self.n as f64;
+        for ((m, s), &x) in self.mean.iter_mut().zip(self.m2.iter_mut()).zip(xs) {
+            let x = f64::from(x);
+            let d = x - *m;
+            *m += d * inv_n;
+            *s += d * (x - *m);
+        }
+    }
+
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Var[X] per the paper's §3.2 definition: sum over coordinates of
+    /// the per-coordinate (sample) variance.
+    pub fn total_variance(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        self.m2.iter().sum::<f64>() / (self.n - 1) as f64
+    }
+
+    /// Per-coordinate sample variances.
+    pub fn coordinate_variances(&self) -> Vec<f64> {
+        if self.n < 2 {
+            return vec![0.0; self.m2.len()];
+        }
+        let d = (self.n - 1) as f64;
+        self.m2.iter().map(|&m| m / d).collect()
+    }
+
+    /// ||E[X]||^2 — used to normalize variance into a relative scale.
+    pub fn mean_sq_norm(&self) -> f64 {
+        self.mean.iter().map(|&m| m * m).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn matches_two_pass_variance() {
+        let mut rng = Pcg32::new(1, 0);
+        let xs: Vec<f64> = (0..5000).map(|_| f64::from(rng.normal()) * 3.0 + 1.0).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|&x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-10);
+        assert!((w.variance() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Pcg32::new(2, 0);
+        let xs: Vec<f64> = (0..1000).map(|_| f64::from(rng.normal())).collect();
+        let mut all = Welford::new();
+        let (mut a, mut b) = (Welford::new(), Welford::new());
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = Welford::new();
+        a.push(1.0);
+        a.push(3.0);
+        let b = Welford::new();
+        let mut c = a.clone();
+        c.merge(&b);
+        assert_eq!(c.mean(), a.mean());
+        let mut d = Welford::new();
+        d.merge(&a);
+        assert_eq!(d.mean(), a.mean());
+    }
+
+    #[test]
+    fn vector_welford_total_variance() {
+        // X ~ N(mu, diag(sigma^2)): total variance ~ sum sigma_i^2
+        let mut rng = Pcg32::new(3, 0);
+        let sigmas = [1.0f32, 2.0, 0.5];
+        let mut vw = VectorWelford::new(3);
+        for _ in 0..20_000 {
+            let x: Vec<f32> = sigmas.iter().map(|&s| rng.normal() * s).collect();
+            vw.push(&x);
+        }
+        let want: f64 = sigmas.iter().map(|&s| f64::from(s) * f64::from(s)).sum();
+        let got = vw.total_variance();
+        assert!((got - want).abs() / want < 0.05, "{got} vs {want}");
+    }
+
+    #[test]
+    fn deterministic_vector_is_zero_variance() {
+        let mut vw = VectorWelford::new(4);
+        for _ in 0..10 {
+            vw.push(&[1.0, 2.0, 3.0, 4.0]);
+        }
+        assert_eq!(vw.total_variance(), 0.0);
+        assert_eq!(vw.mean(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sem_shrinks_with_n() {
+        let mut rng = Pcg32::new(4, 0);
+        let mut w = Welford::new();
+        for _ in 0..100 {
+            w.push(f64::from(rng.normal()));
+        }
+        let sem100 = w.sem();
+        for _ in 0..9900 {
+            w.push(f64::from(rng.normal()));
+        }
+        assert!(w.sem() < sem100 / 5.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Measures wall time with warmup, reports median / mean / p10 / p90 and
+//! derived throughput, and emits both human-readable lines and a CSV
+//! under `results/bench/`. Used by `cargo bench` targets (harness=false).
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Optional work units per iteration (elements, FLOPs) for throughput.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn units_per_sec(&self) -> f64 {
+        self.units_per_iter / (self.median_ns * 1e-9)
+    }
+
+    pub fn human(&self) -> String {
+        let t = fmt_ns(self.median_ns);
+        if self.units_per_iter > 0.0 {
+            format!(
+                "{:<44} {:>12}/iter  [{} .. {}]  {:>12.3e} units/s",
+                self.name,
+                t,
+                fmt_ns(self.p10_ns),
+                fmt_ns(self.p90_ns),
+                self.units_per_sec()
+            )
+        } else {
+            format!(
+                "{:<44} {:>12}/iter  [{} .. {}]",
+                self.name,
+                t,
+                fmt_ns(self.p10_ns),
+                fmt_ns(self.p90_ns)
+            )
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Collected results + CSV emission.
+#[derive(Default)]
+pub struct Bench {
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` adaptively: warm up, then run until ~`budget_ms` or 256
+    /// samples. `units` is per-iteration work for throughput reporting.
+    pub fn run<F: FnMut()>(&mut self, name: &str, units: f64, mut f: F) -> &BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        f();
+        let first = t0.elapsed().as_nanos() as f64;
+        let target_ms = std::env::var("BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(800.0);
+        let iters = ((target_ms * 1e6 / first.max(1.0)) as usize).clamp(5, 256);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p10 = samples[samples.len() / 10];
+        let p90 = samples[samples.len() * 9 / 10];
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            median_ns: median,
+            mean_ns: mean,
+            p10_ns: p10,
+            p90_ns: p90,
+            units_per_iter: units,
+        };
+        println!("{}", r.human());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results to `results/bench/<file>.csv`.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("results/bench")?;
+        let mut out = String::from("name,iters,median_ns,mean_ns,p10_ns,p90_ns,units_per_iter\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.name, r.iters, r.median_ns, r.mean_ns, r.p10_ns, r.p90_ns, r.units_per_iter
+            ));
+        }
+        std::fs::write(format!("results/bench/{file}.csv"), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("BENCH_BUDGET_MS", "20");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        let r = b.run("spin", 1000.0, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.units_per_sec() > 0.0);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Tiny subcommand + flag parser (clap is unavailable offline).
+//!
+//! Grammar: `statquant <command> [positional...] [--flag value] [--switch]`.
+//! Flags may repeat (`--set a=1 --set b=2`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    switches: Vec<String>,
+    /// Which flags/switches were consumed via accessors (unknown-flag check).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap().clone();
+                    out.flags.entry(name.to_string()).or_default().push(v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = a.clone();
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, name: &str) {
+        self.known.borrow_mut().push(name.to_string());
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.mark(name);
+        self.flags
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error on flags that no accessor ever looked at (typo guard).
+    pub fn check_unknown(&self) -> Result<()> {
+        let known = self.known.borrow();
+        for k in self.flags.keys() {
+            if !known.iter().any(|n| n == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        for s in &self.switches {
+            if !known.iter().any(|n| n == s) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn command_positionals_flags_switches() {
+        let a = parse("train config.toml --set lr=0.1 --set bits=4 --verbose --out dir");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional, vec!["config.toml"]);
+        assert_eq!(a.flag_all("set"), vec!["lr=0.1", "bits=4"]);
+        assert_eq!(a.flag("out"), Some("dir"));
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        a.check_unknown().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("exp fig3a --bits=4,5,6");
+        assert_eq!(a.flag("bits"), Some("4,5,6"));
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = parse("x --n 12 --f 0.5");
+        assert_eq!(a.flag_parse::<u64>("n").unwrap(), Some(12));
+        assert_eq!(a.flag_parse::<f64>("f").unwrap(), Some(0.5));
+        let b = parse("x --n twelve");
+        assert!(b.flag_parse::<u64>("n").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("train --unknown 3");
+        assert!(a.check_unknown().is_err());
+        let b = parse("train --known 3");
+        b.flag("known");
+        b.check_unknown().unwrap();
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = parse("x --lr 0.1 --lr 0.2");
+        assert_eq!(a.flag("lr"), Some("0.2"));
+    }
+}

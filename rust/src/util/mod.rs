@@ -1,0 +1,12 @@
+//! In-repo substrates: PRNG, JSON/TOML codecs, CLI parsing, proptest-lite.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! tree, so these standard-ecosystem pieces are implemented here as
+//! first-class, fully-tested modules (DESIGN.md §5, S13).
+
+pub mod cli;
+pub mod json;
+pub mod bench;
+pub mod proptest;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,120 @@
+//! proptest-lite: seeded randomized property testing with shrinking on
+//! the case *index* (re-runnable by seed), since the real proptest crate
+//! is unavailable offline.
+//!
+//! Usage:
+//! ```ignore
+//! check(200, |g| {
+//!     let n = g.usize(1..=64);
+//!     let xs = g.vec_f32(n, -10.0..10.0);
+//!     prop_assert(invariant(&xs), format!("failed for {xs:?}"))
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Per-case random value source.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn usize(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f32(&mut self, range: std::ops::Range<f32>) -> f32 {
+        range.start + self.rng.uniform() * (range.end - range.start)
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self, p: f32) -> bool {
+        self.rng.uniform() < p
+    }
+
+    pub fn vec_f32(&mut self, n: usize, range: std::ops::Range<f32>) -> Vec<f32> {
+        (0..n).map(|_| self.f32(range.clone())).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * scale).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing case index
+/// and seed so the exact case can be replayed (`PROPTEST_SEED` env var).
+pub fn check<F: FnMut(&mut Gen) -> CaseResult>(cases: u64, mut prop: F) {
+    let seed: u64 = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Pcg32::new(seed, case),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (seed {seed}, rerun with \
+                 PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        check(50, |g| {
+            let n = g.usize(1..=10);
+            prop_assert(n >= 1 && n <= 10, "range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_loudly() {
+        check(50, |g| {
+            let x = g.f32(0.0..1.0);
+            prop_assert(x < 0.5, format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seen = Vec::new();
+        check(5, |g| {
+            seen.push(g.usize(0..=1000));
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check(5, |g| {
+            seen2.push(g.usize(0..=1000));
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+}

@@ -1,0 +1,217 @@
+//! Minimal TOML-subset parser for the config system (S13).
+//!
+//! Supports the subset our configs use: `[section]` / `[a.b]` tables,
+//! `key = value` with strings, integers, floats, booleans, and flat
+//! arrays. Values land in the same [`Json`] tree the rest of the stack
+//! uses, keyed by dotted path — `config::TrainConfig` pulls typed fields
+//! out of it with defaults.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse TOML text into a nested Json object.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(ln, "unterminated table header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(ln, "empty table name"));
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            // materialize the table
+            ensure_table(&mut root, &section, ln)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(ln, "expected key = value"))?;
+        let key = line[..eq].trim();
+        let val = parse_value(line[eq + 1..].trim(), ln)?;
+        if key.is_empty() {
+            return Err(err(ln, "empty key"));
+        }
+        let tbl = ensure_table(&mut root, &section, ln)?;
+        tbl.insert(key.to_string(), val);
+    }
+    Ok(Json::Obj(root))
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError {
+        line: line + 1,
+        msg: msg.to_string(),
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    ln: usize,
+) -> Result<&'a mut BTreeMap<String, Json>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(err(ln, "key redefined as table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Json, TomlError> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err(err(ln, "bad escape")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p, ln)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| err(ln, &format!("bad value {s:?}")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_example() {
+        let text = r#"
+# experiment config
+[train]
+model = "cnn"          # which artifact family
+variant = "bhq"
+steps = 400
+lr = 0.1
+bits = 5.0
+warmup_frac = 0.05
+
+[data]
+kind = "synthimg"
+classes = 10
+noise = 0.25
+
+[probe]
+bits = [4, 5, 6, 7, 8]
+seeds = 16
+"#;
+        let j = parse(text).unwrap();
+        assert_eq!(j.path("train.model").unwrap().as_str(), Some("cnn"));
+        assert_eq!(j.path("train.steps").unwrap().as_usize(), Some(400));
+        assert_eq!(j.path("data.noise").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.path("probe.bits").unwrap().as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn nested_tables_and_strings_with_escapes() {
+        let j = parse("[a.b]\nk = \"x\\ny\"\n").unwrap();
+        assert_eq!(j.path("a.b.k").unwrap().as_str(), Some("x\ny"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let j = parse("\n# hi\nk = 1 # trailing\n").unwrap();
+        assert_eq!(j.get("k").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("k =").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("ok = 1\n[bad\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let j = parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(j.get("k").unwrap().as_str(), Some("a#b"));
+    }
+}

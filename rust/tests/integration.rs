@@ -1,0 +1,314 @@
+//! Integration tests over the real AOT artifacts (require
+//! `make artifacts`; each test skips gracefully when artifacts are
+//! missing so `cargo test` stays green on a fresh checkout).
+//!
+//! These are the end-to-end guarantees: the Rust runtime loads the HLO
+//! the Python side lowered, the ABI matches the metadata, training
+//! reduces loss, probes are unbiased, and the Rust-native quantizers
+//! agree statistically with the in-graph (Pallas) ones.
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::{DataParallel, Schedule, Trainer};
+use statquant::data::Dataset;
+use statquant::experiments::common::warm_params;
+use statquant::quant::GradQuantizer;
+use statquant::runtime::{HostTensor, Registry, Runtime, StepKind};
+use statquant::stats::GradVarianceProbe;
+
+fn setup() -> Option<(Runtime, Registry)> {
+    let reg = match Registry::open("artifacts") {
+        Ok(r) => r,
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return None;
+        }
+    };
+    if reg.meta("mlp", "ptq", StepKind::Train).is_err() {
+        eprintln!("SKIP: mlp artifacts missing");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    Some((rt, reg))
+}
+
+fn mlp_cfg(variant: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = "mlp".into();
+    cfg.variant = variant.into();
+    cfg.steps = 60;
+    cfg.lr = 0.05;
+    cfg.bits = 5.0;
+    cfg.eval_every = 30;
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("sq_it_{}", std::process::id()))
+        .display()
+        .to_string();
+    cfg
+}
+
+#[test]
+fn registry_discovers_all_mlp_artifacts() {
+    let Some((_rt, reg)) = setup() else { return };
+    for variant in ["exact", "qat", "ptq", "psq", "bhq"] {
+        for step in [StepKind::Train, StepKind::Probe] {
+            let meta = reg.meta("mlp", variant, step).expect("meta");
+            assert!(meta.hlo_path.exists(), "{:?} missing", meta.hlo_path);
+            assert_eq!(meta.n_params, reg.init_params("mlp").unwrap().len());
+        }
+    }
+    assert!(reg.meta("mlp", "qat", StepKind::Eval).is_ok());
+    assert!(reg.meta("mlp", "qat", StepKind::ActGrad).is_ok());
+}
+
+#[test]
+fn abi_validation_rejects_bad_inputs() {
+    let Some((rt, reg)) = setup() else { return };
+    let exec = rt
+        .executor(reg.meta("mlp", "qat", StepKind::Eval).unwrap())
+        .unwrap();
+    // wrong arity
+    assert!(exec.run(&[HostTensor::F32(vec![0.0])]).is_err());
+    // wrong element count
+    let p = reg.init_params("mlp").unwrap();
+    let bad = [
+        HostTensor::F32(p.clone()),
+        HostTensor::F32(vec![0.0; 3]), // x should be batch*in_dim
+        HostTensor::I32(vec![0; 64]),
+    ];
+    assert!(exec.run(&bad).is_err());
+    // wrong dtype for labels
+    let meta = &exec.meta;
+    let x_elems: usize = meta.inputs[1].numel();
+    let bad_dtype = [
+        HostTensor::F32(p),
+        HostTensor::F32(vec![0.0; x_elems]),
+        HostTensor::F32(vec![0.0; 64]),
+    ];
+    assert!(exec.run(&bad_dtype).is_err());
+}
+
+#[test]
+fn training_reduces_loss_every_variant() {
+    let Some((rt, reg)) = setup() else { return };
+    for variant in ["exact", "qat", "ptq", "psq", "bhq"] {
+        let mut tr = Trainer::new(&rt, &reg, mlp_cfg(variant)).unwrap();
+        let report = tr.train().unwrap();
+        assert!(!report.diverged, "{variant} diverged");
+        let first = report.curve.first().unwrap().1;
+        assert!(
+            report.final_train_loss < first * 0.6,
+            "{variant}: loss {first} -> {} (insufficient descent)",
+            report.final_train_loss
+        );
+        assert!(
+            report.final_eval_acc > 0.5,
+            "{variant}: eval acc {}",
+            report.final_eval_acc
+        );
+    }
+}
+
+#[test]
+fn training_is_deterministic_given_seed() {
+    let Some((rt, reg)) = setup() else { return };
+    let run = |seed: u64| {
+        let mut cfg = mlp_cfg("ptq");
+        cfg.steps = 20;
+        cfg.seed = seed;
+        let mut tr = Trainer::new(&rt, &reg, cfg).unwrap();
+        tr.train().unwrap().final_train_loss
+    };
+    assert_eq!(run(7), run(7));
+    assert_ne!(run(7), run(8));
+}
+
+#[test]
+fn probe_gradients_unbiased_vs_qat() {
+    let Some((rt, reg)) = setup() else { return };
+    let mut cfg = mlp_cfg("qat");
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("sq_it_warm_{}", std::process::id()))
+        .display()
+        .to_string();
+    let params = warm_params(&rt, &reg, &cfg, 30).unwrap();
+
+    let qat_exec = rt
+        .executor(reg.meta("mlp", "qat", StepKind::Probe).unwrap())
+        .unwrap();
+    let qat = GradVarianceProbe::new(&qat_exec);
+    let ds = statquant::coordinator::make_dataset(&cfg, &[64, 64], "synthimg");
+    let b = ds.batch(5);
+    let (g_ref, _) = qat.mean_gradient(&params, &b.x, &b.y, 8.0, 1, 0).unwrap();
+
+    let exec = rt
+        .executor(reg.meta("mlp", "ptq", StepKind::Probe).unwrap())
+        .unwrap();
+    let probe = GradVarianceProbe::new(&exec);
+    let seeds = 48;
+    let (mean, _) = probe.mean_gradient(&params, &b.x, &b.y, 5.0, seeds, 3).unwrap();
+    let dot: f64 = mean.iter().zip(&g_ref).map(|(&a, &b)| a * b).sum();
+    let na = mean.iter().map(|&a| a * a).sum::<f64>().sqrt();
+    let nb = g_ref.iter().map(|&a| a * a).sum::<f64>().sqrt();
+    let cos = dot / (na * nb).max(1e-30);
+    assert!(cos > 0.97, "cos(E[fqt], qat) = {cos}");
+}
+
+#[test]
+fn variance_ordering_through_real_model() {
+    let Some((rt, reg)) = setup() else { return };
+    let mut cfg = mlp_cfg("qat");
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("sq_it_vo_{}", std::process::id()))
+        .display()
+        .to_string();
+    let params = warm_params(&rt, &reg, &cfg, 40).unwrap();
+    let ds = statquant::coordinator::make_dataset(&cfg, &[64, 64], "synthimg");
+    let b = ds.batch(77);
+    let mut var = std::collections::HashMap::new();
+    for q in ["ptq", "psq", "bhq"] {
+        let exec = rt
+            .executor(reg.meta("mlp", q, StepKind::Probe).unwrap())
+            .unwrap();
+        let probe = GradVarianceProbe::new(&exec);
+        let rep = probe
+            .quantization_variance(&params, &b.x, &b.y, 4.0, 10, 5)
+            .unwrap();
+        var.insert(q, rep.quant_variance);
+    }
+    // the paper's headline ordering through the full model graph
+    assert!(var["ptq"] > var["psq"], "{var:?}");
+    assert!(var["psq"] > var["bhq"], "{var:?}");
+}
+
+#[test]
+fn bits_input_scales_variance_4x() {
+    let Some((rt, reg)) = setup() else { return };
+    let mut cfg = mlp_cfg("qat");
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("sq_it_4x_{}", std::process::id()))
+        .display()
+        .to_string();
+    let params = warm_params(&rt, &reg, &cfg, 30).unwrap();
+    let ds = statquant::coordinator::make_dataset(&cfg, &[64, 64], "synthimg");
+    let b = ds.batch(88);
+    let exec = rt
+        .executor(reg.meta("mlp", "ptq", StepKind::Probe).unwrap())
+        .unwrap();
+    let probe = GradVarianceProbe::new(&exec);
+    let v4 = probe
+        .quantization_variance(&params, &b.x, &b.y, 4.0, 16, 9)
+        .unwrap()
+        .quant_variance;
+    let v6 = probe
+        .quantization_variance(&params, &b.x, &b.y, 6.0, 16, 9)
+        .unwrap()
+        .quant_variance;
+    let ratio = v4 / v6.max(1e-30);
+    // two bits => ~16x; allow generous MC slack
+    assert!((6.0..50.0).contains(&ratio), "4->6 bit ratio {ratio}");
+}
+
+#[test]
+fn eval_artifact_consistent_with_train_aux() {
+    let Some((rt, reg)) = setup() else { return };
+    let mut tr = Trainer::new(&rt, &reg, mlp_cfg("qat")).unwrap();
+    let report = tr.train().unwrap();
+    let (loss, acc) = tr.evaluate(8).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+    assert!((loss - report.final_eval_loss).abs() < 1e-6); // same eval path
+}
+
+#[test]
+fn data_parallel_quantized_allreduce_trains() {
+    let Some((rt, reg)) = setup() else { return };
+    let exec = rt
+        .executor(reg.meta("mlp", "qat", StepKind::Probe).unwrap())
+        .unwrap();
+    let cfg = mlp_cfg("qat");
+    let ds = statquant::coordinator::make_dataset(&cfg, &[64, 64], "synthimg");
+    let dp = DataParallel {
+        probe: &exec,
+        workers: 4,
+        allreduce_bits: 6.0,
+        quantizer: GradQuantizer::Psq,
+        momentum: 0.9,
+    };
+    let mut params = reg.init_params("mlp").unwrap();
+    let hist = dp
+        .train(ds.as_ref(), &mut params, 60, 0.05, Schedule::Cosine, 3, 8.0, 1)
+        .unwrap();
+    let first = hist.first().unwrap().loss;
+    let last = hist.last().unwrap().loss;
+    assert!(
+        last < first * 0.6,
+        "quantized all-reduce failed to train: {first} -> {last}"
+    );
+}
+
+#[test]
+fn actgrad_probe_shape_matches_meta() {
+    let Some((rt, reg)) = setup() else { return };
+    let meta = reg.meta("mlp", "qat", StepKind::ActGrad).unwrap();
+    let exec = rt.executor(meta).unwrap();
+    let params = reg.init_params("mlp").unwrap();
+    let cfg = mlp_cfg("qat");
+    let ds = statquant::coordinator::make_dataset(&cfg, &meta.input_shape, "synthimg");
+    let b = ds.batch(0);
+    let out = exec
+        .run(&[
+            HostTensor::F32(params),
+            b.x,
+            b.y,
+            HostTensor::F32(vec![0.0]),
+        ])
+        .unwrap();
+    let expect: usize = meta.probe_shape.iter().product();
+    assert_eq!(out[0].len(), expect);
+    // gradient of a mean cross-entropy at the tap must be non-trivial
+    let g = out[0].as_f32().unwrap();
+    assert!(g.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn checkpoint_resume_matches_continuous_eval() {
+    let Some((rt, reg)) = setup() else { return };
+    // train 30 steps, checkpoint, reload into a fresh trainer, eval must match
+    let mut cfg = mlp_cfg("bhq");
+    cfg.steps = 30;
+    let mut tr = Trainer::new(&rt, &reg, cfg.clone()).unwrap();
+    tr.train().unwrap();
+    let (l1, a1) = tr.evaluate(4).unwrap();
+
+    let ck = statquant::coordinator::Checkpoint {
+        step: 30,
+        params: tr.params.clone(),
+        momentum: tr.momentum.clone(),
+    };
+    let dir = std::env::temp_dir().join(format!("sq_resume_{}", std::process::id()));
+    let meta = ck.save(&dir).unwrap();
+
+    let mut tr2 = Trainer::new(&rt, &reg, cfg).unwrap();
+    let ck2 = statquant::coordinator::Checkpoint::load(&meta).unwrap();
+    tr2.params = ck2.params;
+    let (l2, a2) = tr2.evaluate(4).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cnn_artifacts_load_and_step_if_present() {
+    let Some((rt, reg)) = setup() else { return };
+    if reg.meta("cnn", "bhq", StepKind::Train).is_err() {
+        eprintln!("SKIP: cnn artifacts missing");
+        return;
+    }
+    let mut cfg = mlp_cfg("bhq");
+    cfg.model = "cnn".into();
+    cfg.steps = 3;
+    cfg.eval_every = 3;
+    let mut tr = Trainer::new(&rt, &reg, cfg).unwrap();
+    let report = tr.train().unwrap();
+    assert_eq!(report.steps, 3);
+    assert!(report.final_train_loss.is_finite());
+}

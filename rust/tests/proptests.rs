@@ -1,0 +1,363 @@
+//! Property-based tests over the native quantizer stack and substrates
+//! (DESIGN.md §8), using the in-repo proptest-lite harness.
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::Schedule;
+use statquant::quant::{bfp, bhq, fp8, nbins, psq, ptq, GradQuantizer, Mat};
+use statquant::stats::{Histogram, VectorWelford, Welford};
+use statquant::util::json::Json;
+use statquant::util::proptest::{check, prop_assert, Gen};
+use statquant::util::rng::Pcg32;
+use statquant::util::toml;
+
+fn random_matrix(g: &mut Gen, max_n: usize, max_d: usize) -> Mat {
+    let n = g.usize(1..=max_n);
+    let d = g.usize(1..=max_d);
+    let outlier = g.bool(0.5);
+    let mut m = Mat::zeros(n, d);
+    for i in 0..n {
+        let scale = if outlier && i == 0 { 10.0 } else { g.f32(0.001..2.0) };
+        for v in m.row_mut(i) {
+            *v = g.normal() * scale;
+        }
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Quantizer invariants
+// ---------------------------------------------------------------------------
+
+/// Every quantizer's reconstruction error is bounded elementwise: for the
+/// affine quantizers, |deq - x| <= that row's bin size (SR moves at most
+/// one bin; zero-point shift is exact).
+#[test]
+fn prop_reconstruction_error_bounded() {
+    check(60, |g| {
+        let x = random_matrix(g, 24, 48);
+        let bits = g.usize(2..=8) as f32;
+        let nb = nbins(bits);
+        let q = ptq::quantize(&x, nb, g.rng());
+        for (i, (&d, &v)) in q.deq.data.iter().zip(&x.data).enumerate() {
+            let bin = q.row_bin_size[i / x.cols];
+            if (d - v).abs() > bin * 1.01 + 1e-6 {
+                return Err(format!("ptq elem {i}: |{d}-{v}| > bin {bin}"));
+            }
+        }
+        let q = psq::quantize(&x, nb, g.rng());
+        for (i, (&d, &v)) in q.deq.data.iter().zip(&x.data).enumerate() {
+            let bin = q.row_bin_size[i / x.cols];
+            if (d - v).abs() > bin * 1.01 + 1e-6 {
+                return Err(format!("psq elem {i}: |{d}-{v}| > bin {bin}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// PSQ's variance bound is never above PTQ's (§4.1: R(X) = max_i R(x_i)).
+#[test]
+fn prop_psq_bound_le_ptq_bound() {
+    check(80, |g| {
+        let x = random_matrix(g, 16, 32);
+        let nb = nbins(g.usize(2..=8) as f32);
+        prop_assert(
+            psq::variance_bound(&x, nb) <= ptq::variance_bound(&x, nb) * (1.0 + 1e-9),
+            "psq bound > ptq bound",
+        )
+    });
+}
+
+/// BHQ plan is always a partition with sorted-leader structure, for any
+/// input (including degenerate all-zero and constant matrices).
+#[test]
+fn prop_bhq_plan_partition() {
+    check(80, |g| {
+        let x = if g.bool(0.1) {
+            Mat::zeros(g.usize(1..=16), g.usize(1..=8)) // degenerate
+        } else {
+            random_matrix(g, 32, 16)
+        };
+        let plan = bhq::build_plan(&x);
+        let mut seen = vec![false; x.rows];
+        for grp in &plan.groups {
+            if grp.rows.is_empty() {
+                return Err("empty group".into());
+            }
+            for &r in &grp.rows {
+                if seen[r] {
+                    return Err(format!("row {r} twice"));
+                }
+                seen[r] = true;
+            }
+            if !(grp.s1.is_finite() && grp.s2.is_finite() && grp.s1 > 0.0 && grp.s2 > 0.0) {
+                return Err(format!("bad scales {} {}", grp.s1, grp.s2));
+            }
+        }
+        prop_assert(seen.into_iter().all(|s| s), "rows not covered")
+    });
+}
+
+/// BHQ round trip at high bitwidth reconstructs tightly (transform is
+/// orthogonal, so no amplification) for any structure.
+#[test]
+fn prop_bhq_high_bits_tight() {
+    check(40, |g| {
+        let x = random_matrix(g, 16, 24);
+        let q = bhq::quantize(&x, nbins(10.0), g.rng());
+        let rel = q.deq.sq_err(&x) / x.frob_sq().max(1e-12);
+        prop_assert(rel < 1e-2, format!("rel err {rel}"))
+    });
+}
+
+/// All quantizers preserve shape and produce finite values on any input.
+#[test]
+fn prop_all_quantizers_finite() {
+    check(60, |g| {
+        let x = random_matrix(g, 12, 20);
+        let bits = g.usize(2..=8) as f32;
+        for q in GradQuantizer::ALL {
+            let out = q.apply(&x, bits, g.rng());
+            if out.rows != x.rows || out.cols != x.cols {
+                return Err(format!("{q:?} changed shape"));
+            }
+            if !out.data.iter().all(|v| v.is_finite()) {
+                return Err(format!("{q:?} produced non-finite values"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// FP8 saturates: outputs never exceed the max-normal after unscaling.
+#[test]
+fn prop_fp8_saturation() {
+    check(40, |g| {
+        let x = random_matrix(g, 8, 16);
+        let absmax = x.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let out = fp8::quantize(&x, g.rng());
+        let omax = out.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        prop_assert(
+            omax <= absmax * 1.001 + 1e-6,
+            format!("fp8 overshoot {omax} > {absmax}"),
+        )
+    });
+}
+
+/// BFP with block == cols equals BFP row-at-once; ragged blocks cover all.
+#[test]
+fn prop_bfp_block_coverage() {
+    check(40, |g| {
+        let x = random_matrix(g, 6, 40);
+        let block = g.usize(1..=48);
+        let out = bfp::quantize(&x, nbins(8.0), block, g.rng());
+        prop_assert(
+            out.data.iter().all(|v| v.is_finite()) && out.cols == x.cols,
+            "bfp bad output",
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Substrate invariants
+// ---------------------------------------------------------------------------
+
+/// Welford merge == sequential, for random splits.
+#[test]
+fn prop_welford_merge() {
+    check(60, |g| {
+        let n = g.usize(2..=200);
+        let xs = g.vec_normal(n, 3.0);
+        let cut = g.usize(1..=n - 1);
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(f64::from(x));
+            if i < cut {
+                a.push(f64::from(x));
+            } else {
+                b.push(f64::from(x));
+            }
+        }
+        a.merge(&b);
+        prop_assert(
+            (a.mean() - all.mean()).abs() < 1e-9
+                && (a.variance() - all.variance()).abs() < 1e-9,
+            "merge mismatch",
+        )
+    });
+}
+
+/// VectorWelford total variance equals the sum of scalar Welfords.
+#[test]
+fn prop_vector_welford_consistent() {
+    check(30, |g| {
+        let dim = g.usize(1..=8);
+        let n = g.usize(2..=50);
+        let mut vw = VectorWelford::new(dim);
+        let mut ws: Vec<Welford> = (0..dim).map(|_| Welford::new()).collect();
+        for _ in 0..n {
+            let xs = g.vec_normal(dim, 1.0);
+            vw.push(&xs);
+            for (w, &x) in ws.iter_mut().zip(&xs) {
+                w.push(f64::from(x));
+            }
+        }
+        let sum: f64 = ws.iter().map(Welford::sample_variance).sum();
+        prop_assert(
+            (vw.total_variance() - sum).abs() < 1e-9 * sum.max(1.0),
+            format!("{} vs {}", vw.total_variance(), sum),
+        )
+    });
+}
+
+/// Histogram conserves mass: total == pushed count for any data/range.
+#[test]
+fn prop_histogram_mass() {
+    check(60, |g| {
+        let n = g.usize(1..=300);
+        let vals = g.vec_f32(n, -50.0..50.0);
+        let h = Histogram::from_values(&vals, g.usize(1..=64));
+        prop_assert(h.total() as usize == n, "mass lost")
+    });
+}
+
+/// LR schedules never produce negative or non-finite rates, and warmup
+/// never exceeds the base rate.
+#[test]
+fn prop_lr_schedules_sane() {
+    check(80, |g| {
+        let total = g.usize(1..=1000) as u64;
+        let warmup = g.usize(0..=total as usize) as u64;
+        let base = g.f32(1e-5..10.0) as f64;
+        for sched in [Schedule::Cosine, Schedule::Constant, Schedule::Step] {
+            for step in 0..total {
+                let lr = sched.lr(base, step, total, warmup);
+                if !(lr.is_finite() && lr >= 0.0 && lr <= base * 1.0001) {
+                    return Err(format!("{sched:?} step {step}: lr {lr}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// JSON roundtrip: any tree we can build serializes and reparses equal.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize(0..=3) } else { g.usize(0..=5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool(0.5)),
+            2 => Json::Num((g.normal() * 100.0).round().into()),
+            3 => Json::Str(
+                (0..g.usize(0..=12))
+                    .map(|_| char::from(b'a' + (g.usize(0..=25) as u8)))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize(0..=4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize(0..=4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(100, |g| {
+        let j = random_json(g, 3);
+        let s = j.to_string_pretty();
+        match Json::parse(&s) {
+            Ok(j2) => prop_assert(j == j2, format!("roundtrip mismatch: {s}")),
+            Err(e) => Err(format!("reparse failed: {e} for {s}")),
+        }
+    });
+}
+
+/// TOML: config overrides parse and round-trip through TrainConfig::set.
+#[test]
+fn prop_config_set_numeric_fields() {
+    check(60, |g| {
+        let mut cfg = TrainConfig::default();
+        let lr = g.f32(0.0001..2.0) as f64;
+        let steps = g.usize(1..=5000);
+        let bits = g.usize(2..=8);
+        cfg.set(&format!("lr={lr}")).map_err(|e| e.to_string())?;
+        cfg.set(&format!("steps={steps}")).map_err(|e| e.to_string())?;
+        cfg.set(&format!("bits={bits}")).map_err(|e| e.to_string())?;
+        prop_assert(
+            (cfg.lr - lr).abs() < 1e-12 && cfg.steps == steps as u64,
+            "set mismatch",
+        )
+    });
+}
+
+/// TOML parser: generated simple configs always parse to the same tree.
+#[test]
+fn prop_toml_parse_generated() {
+    check(60, |g| {
+        let a = g.usize(0..=100);
+        let b = g.f32(-5.0..5.0);
+        let text = format!("[s]\na = {a}\nb = {b}\nflag = true\nname = \"x\"\n");
+        let j = toml::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert(
+            j.path("s.a").and_then(Json::as_usize) == Some(a)
+                && j.path("s.flag").and_then(Json::as_bool) == Some(true),
+            "toml field mismatch",
+        )
+    });
+}
+
+/// Pcg32 `below(n)` is always < n (Lemire rejection).
+#[test]
+fn prop_pcg_below_in_range() {
+    check(100, |g| {
+        let n = g.usize(1..=1_000_000) as u32;
+        let mut rng = Pcg32::new(g.case, 5);
+        for _ in 0..100 {
+            if rng.below(n) >= n {
+                return Err(format!("below({n}) out of range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Unbiasedness as a property: mean over many draws approaches the input
+/// for randomly structured matrices (all paper quantizers).
+#[test]
+fn prop_quantizers_unbiased_statistical() {
+    check(8, |g| {
+        let x = random_matrix(g, 8, 12);
+        let reps = 400;
+        for q in GradQuantizer::PAPER {
+            let mut mean = vec![0.0f64; x.len()];
+            let mut m2 = vec![0.0f64; x.len()];
+            for _ in 0..reps {
+                let out = q.apply(&x, 4.0, g.rng());
+                for ((m, s), &v) in mean.iter_mut().zip(m2.iter_mut()).zip(&out.data) {
+                    *m += f64::from(v) / f64::from(reps);
+                    *s += f64::from(v) * f64::from(v) / f64::from(reps);
+                }
+            }
+            // worst-case undetectable drift when frac(t) ~ few/reps: a
+            // rare bin-flip may not be sampled at all, shifting the mean
+            // by up to ~bin * O(1/reps). Bound bin by the global range/B.
+            let (lo, hi) = x.minmax();
+            let bin = f64::from(hi - lo) / 15.0;
+            for i in 0..x.len() {
+                let var = (m2[i] - mean[i] * mean[i]).max(0.0);
+                let se = (var / f64::from(reps)).sqrt();
+                let diff = (mean[i] - f64::from(x.data[i])).abs();
+                if diff > 6.0 * se + 10.0 * bin / f64::from(reps)
+                    + 1e-3 * f64::from(x.data[i].abs()) + 1e-5 {
+                    return Err(format!(
+                        "{q:?} elem {i}: mean {} vs {} (se {se})",
+                        mean[i], x.data[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
