@@ -80,7 +80,7 @@ impl Checkpoint {
             .filter(|p| {
                 p.file_name()
                     .and_then(|s| s.to_str())
-                    .map_or(false, |s| s.starts_with("ckpt_") && s.ends_with(".json"))
+                    .is_some_and(|s| s.starts_with("ckpt_") && s.ends_with(".json"))
             })
             .collect();
         metas.sort();

@@ -1,9 +1,10 @@
 //! Training coordinator (S8): the L3 driver around the fused train-step
 //! artifact — LR schedule, data feed, eval, metrics, checkpointing.
 //!
-//! Hot loop: one PJRT execute per step; the optimizer (momentum SGD,
-//! paper Appendix E) is fused *inside* the artifact, so the coordinator
-//! only shuttles the flat state vectors and scalars.
+//! Hot loop: one executor dispatch per step (PJRT or the native backend,
+//! see `runtime`); the optimizer (momentum SGD, paper Appendix E) is
+//! fused *inside* the artifact, so the coordinator only shuttles the
+//! flat state vectors and scalars.
 
 use std::path::PathBuf;
 use std::time::Instant;

@@ -8,7 +8,7 @@ use crate::coordinator::{DataParallel, Schedule};
 use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
 use crate::quant::bhq::{self, Proxy};
 use crate::quant::{GradQuantizer, Mat};
-use crate::runtime::{Executor, HostTensor, Registry, Runtime, StepKind};
+use crate::runtime::{HostTensor, Registry, Runtime, StepKind};
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
 

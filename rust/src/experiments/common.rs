@@ -25,8 +25,11 @@ pub fn out_dir(args: &Args) -> std::path::PathBuf {
 
 /// Base TrainConfig from common experiment flags.
 pub fn base_config(args: &Args, reg: &Registry) -> TrainConfig {
-    let mut cfg = TrainConfig::default();
-    cfg.artifacts_dir = reg.dir.display().to_string();
+    let mut cfg = TrainConfig {
+        artifacts_dir: reg.dir.display().to_string(),
+        out_dir: "results/runs".into(),
+        ..TrainConfig::default()
+    };
     if let Some(m) = args.flag("model") {
         cfg.model = m.into();
     }
@@ -41,8 +44,6 @@ pub fn base_config(args: &Args, reg: &Registry) -> TrainConfig {
     }
     if let Some(o) = args.flag("out") {
         cfg.out_dir = o.into();
-    } else {
-        cfg.out_dir = "results/runs".into();
     }
     cfg
 }

@@ -17,7 +17,7 @@ use crate::coordinator::Trainer;
 use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
 use crate::runtime::{Registry, Runtime, StepKind};
 use crate::stats::GradVarianceProbe;
-use crate::{coordinator::trainer::make_dataset, runtime::Executor};
+use crate::coordinator::trainer::make_dataset;
 use crate::util::cli::Args;
 
 pub fn fig3a(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {

@@ -13,7 +13,7 @@ use super::common::{base_config, out_dir, warm_params};
 use crate::coordinator::trainer::make_dataset;
 use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
 use crate::quant::{GradQuantizer, Mat};
-use crate::runtime::{Executor, HostTensor, Registry, Runtime, StepKind};
+use crate::runtime::{HostTensor, Registry, Runtime, StepKind};
 use crate::stats::Histogram;
 use crate::util::rng::Pcg32;
 
@@ -54,7 +54,7 @@ pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
     // few outliers" is the paper's empirical premise; print the skew.
     let mut ranges: Vec<f32> = g.row_minmax().iter().map(|&(lo, hi)| hi - lo).collect();
     let mut sorted = ranges.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f32::total_cmp);
     let med = sorted[n / 2];
     let max = sorted[n - 1];
     println!(
@@ -93,7 +93,7 @@ pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
 
         let hist = Histogram::from_values(&qz.codes.data, 64);
         let mut bins = qz.row_bin_size.clone();
-        bins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bins.sort_by(f32::total_cmp);
         let max_bin = bins[bins.len() - 1];
         let med_bin = bins[bins.len() / 2];
         table.row(vec![
@@ -122,7 +122,7 @@ pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
         dir.join("fig4_row_ranges.csv"),
         Histogram::from_values(&ranges, 64).to_csv(),
     )?;
-    ranges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ranges.sort_by(f32::total_cmp);
     println!("\n{}", table.render());
     println!("csv -> {}/fig4_*.csv", dir.display());
     Ok(())

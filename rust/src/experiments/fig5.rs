@@ -14,7 +14,7 @@ use super::common::{base_config, bits_list, out_dir, warm_params};
 use crate::coordinator::trainer::make_dataset;
 use crate::coordinator::Trainer;
 use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
-use crate::runtime::{Executor, Registry, Runtime, StepKind};
+use crate::runtime::{Registry, Runtime, StepKind};
 use crate::stats::GradVarianceProbe;
 use crate::util::cli::Args;
 

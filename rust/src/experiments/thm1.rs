@@ -12,7 +12,7 @@ use anyhow::Result;
 use super::common::{base_config, bits_list, warm_params};
 use crate::coordinator::trainer::make_dataset;
 use crate::metrics::MarkdownTable;
-use crate::runtime::{Executor, Registry, Runtime, StepKind};
+use crate::runtime::{Registry, Runtime, StepKind};
 use crate::stats::GradVarianceProbe;
 use crate::util::cli::Args;
 

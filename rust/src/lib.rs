@@ -9,14 +9,17 @@
 //! - **L2** (`python/compile/`): the paper's gradient quantizers
 //!   (PTQ/PSQ/BHQ + FP8/BFP extension formats) and the FQT backward pass
 //!   (Eq. 6) inside JAX models, AOT-lowered to HLO text.
-//! - **L3** (this crate): the training framework — PJRT runtime,
-//!   coordinator (train loop, LR schedules, checkpointing, data-parallel
-//!   simulation with quantized all-reduce), synthetic data substrates,
-//!   native quantizers, statistics engine, and the experiment harness
-//!   that regenerates every table and figure in the paper's evaluation.
+//! - **L3** (this crate): the training framework — a pluggable executor
+//!   runtime (pure-Rust native backend by default, PJRT behind the
+//!   `pjrt` cargo feature), coordinator (train loop, LR schedules,
+//!   checkpointing, data-parallel simulation with quantized all-reduce),
+//!   synthetic data substrates, native quantizers, statistics engine,
+//!   and the experiment harness that regenerates every table and figure
+//!   in the paper's evaluation.
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
-//! models once; the `statquant` binary is self-contained afterwards.
+//! models once (or `statquant gen-artifacts` writes the native-backend
+//! set); the `statquant` binary is self-contained afterwards.
 //!
 //! See DESIGN.md for the system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.

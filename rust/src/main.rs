@@ -5,10 +5,12 @@
 //!   eval  --model M [--ckpt meta.json]       evaluate a checkpoint/init
 //!   probe --model M --variant Q [--bits ...] gradient-variance probe
 //!   exp <name> [flags]                       regenerate a paper table/figure
+//!   gen-artifacts [--artifacts DIR]          write the native MLP artifacts
 //!   list                                     show available artifacts
 //!
-//! Python never runs here: `make artifacts` must have populated the
-//! artifacts directory (HLO text + metadata + init params) beforehand.
+//! Python never runs here: either `make artifacts` (AOT-lowered HLO, run
+//! under `--features pjrt`) or `statquant gen-artifacts` (native backend)
+//! must have populated the artifacts directory beforehand.
 
 use std::path::Path;
 
@@ -18,7 +20,7 @@ use statquant::config::TrainConfig;
 use statquant::coordinator::{Checkpoint, Trainer};
 use statquant::experiments;
 use statquant::metrics::fmt_sig;
-use statquant::runtime::{Executor, Registry, Runtime, StepKind};
+use statquant::runtime::{MlpSpec, Registry, Runtime, StepKind};
 use statquant::stats::GradVarianceProbe;
 use statquant::util::cli::Args;
 
@@ -37,6 +39,7 @@ fn usage() -> &'static str {
      eval  --model M [--artifacts DIR] [--ckpt ckpt_xxx.json] [--batches N]\n\
      probe --model M --variant Q [--bits 4,5,6] [--seeds K] [--warm N]\n\
      exp   <fig3a|fig3bc|fig4|fig5|table1|table2|thm1|ablate-*> [flags]\n\
+     gen-artifacts [--artifacts DIR]\n\
      list  [--artifacts DIR]\n"
 }
 
@@ -56,6 +59,16 @@ fn run(argv: &[String]) -> Result<()> {
             for k in keys {
                 println!("{k}");
             }
+            Ok(())
+        }
+        "gen-artifacts" => {
+            args.check_unknown()?;
+            let spec = MlpSpec::default();
+            statquant::runtime::native::write_artifacts(Path::new(&artifacts), &spec)?;
+            println!(
+                "[gen-artifacts] wrote mlp artifacts ({} params) -> {artifacts}",
+                spec.n_params()
+            );
             Ok(())
         }
         "train" => cmd_train(&args, &artifacts),
@@ -127,10 +140,12 @@ fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
 
     let rt = Runtime::cpu()?;
     let reg = Registry::open(artifacts)?;
-    let mut cfg = TrainConfig::default();
-    cfg.model = model.clone();
-    cfg.variant = "qat".into();
-    cfg.artifacts_dir = artifacts.to_string();
+    let cfg = TrainConfig {
+        model: model.clone(),
+        variant: "qat".into(),
+        artifacts_dir: artifacts.to_string(),
+        ..TrainConfig::default()
+    };
     let mut tr = Trainer::new(&rt, &reg, cfg)?;
     if let Some(p) = ckpt {
         let ck = Checkpoint::load(Path::new(&p))?;
@@ -157,10 +172,12 @@ fn cmd_probe(args: &Args, artifacts: &str) -> Result<()> {
 
     let rt = Runtime::cpu()?;
     let reg = Registry::open(artifacts)?;
-    let mut cfg = TrainConfig::default();
-    cfg.model = model.clone();
-    cfg.artifacts_dir = artifacts.to_string();
-    cfg.out_dir = "results/runs".into();
+    let cfg = TrainConfig {
+        model: model.clone(),
+        artifacts_dir: artifacts.to_string(),
+        out_dir: "results/runs".into(),
+        ..TrainConfig::default()
+    };
     let params = statquant::experiments::common::warm_params(&rt, &reg, &cfg, warm)?;
 
     let meta = reg.meta(&model, &variant, StepKind::Probe)?;

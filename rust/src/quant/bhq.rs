@@ -54,6 +54,9 @@ pub enum Proxy {
 /// score each with the selected variance proxy, pick the argmin.
 pub fn select_group_count_with(sorted_mags: &[f32], proxy: Proxy) -> usize {
     let n = sorted_mags.len();
+    if n == 0 {
+        return 0; // empty matrix: no rows, no groups
+    }
     // powers of two up to N/2, plus G = N (all-singleton = PSQ fallback:
     // Q = I, s1 = B/R — essential on homogeneous gradients, where any
     // grouping smears equal rows together and inflates variance ~ m^2).
@@ -112,7 +115,10 @@ pub fn build_plan_with(x: &Mat, proxy: Proxy) -> Plan {
     let n = x.rows;
     let mags = x.row_absmax();
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| mags[b].partial_cmp(&mags[a]).unwrap());
+    // total_cmp: a NaN magnitude (diverged gradient row) must not panic
+    // the planner; NaN sorts above every finite value in descending
+    // order, and quantize() short-circuits NaN input before reflection.
+    order.sort_by(|&a, &b| mags[b].total_cmp(&mags[a]));
     let sorted_mags: Vec<f32> = order.iter().map(|&i| mags[i]).collect();
 
     let g = select_group_count_with(&sorted_mags, proxy);
@@ -229,6 +235,12 @@ pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
 
 /// BHQ with an explicit group-count proxy (the `ablate-bhq-proxy` knob).
 pub fn quantize_with(x: &Mat, nbins: f32, rng: &mut Pcg32, proxy: Proxy) -> Quantized {
+    // NaN anywhere poisons the whole output: the Householder reflection
+    // mixes rows within a group, and `sr(NaN).max(0.0)` would otherwise
+    // silently turn a diverged row into finite garbage for the group.
+    if x.data.iter().any(|v| v.is_nan()) {
+        return super::poisoned(x.rows, x.cols);
+    }
     let plan = build_plan_with(x, proxy);
     let n = x.rows;
     let d = x.cols;
@@ -399,6 +411,37 @@ mod tests {
             let z = diff / (se + 1e-12);
             assert!(z < 6.0, "elem {i}: z={z} mean {m} x {}", x.data[i]);
         }
+    }
+
+    /// Regression: the seed planner sorted with
+    /// `partial_cmp(..).unwrap()`, which panics the moment one gradient
+    /// row contains NaN. The plan must build (total_cmp) and the
+    /// quantizer must return a poisoned output instead of aborting.
+    #[test]
+    fn nan_row_does_not_panic_and_poisons_output() {
+        let mut x = outlier(8, 8, 17, 4.0, 0.1);
+        x.row_mut(3)[2] = f32::NAN;
+        let plan = build_plan(&x); // seed code: panic here
+        assert_eq!(plan.order.len(), 8);
+        let mut rng = Pcg32::new(9, 9);
+        let q = quantize(&x, 15.0, &mut rng);
+        assert!(q.deq.data.iter().all(|v| v.is_nan()));
+        assert!(q.codes.data.iter().all(|v| v.is_nan()));
+    }
+
+    /// Regression: the group-count sweep indexed `sorted_mags[..1]` on an
+    /// empty matrix.
+    #[test]
+    fn empty_and_degenerate_shapes_do_not_panic() {
+        let mut rng = Pcg32::new(1, 1);
+        for (r, c) in [(0usize, 0usize), (0, 5), (5, 0)] {
+            let x = Mat::zeros(r, c);
+            let q = quantize(&x, 15.0, &mut rng);
+            assert_eq!(q.deq.rows, r);
+            assert_eq!(q.deq.cols, c);
+            assert!(q.deq.data.iter().all(|v| *v == 0.0));
+        }
+        assert_eq!(select_group_count(&[]), 0);
     }
 
     #[test]

@@ -99,6 +99,18 @@ pub struct Quantized {
     pub row_bin_size: Vec<f32>,
 }
 
+/// Fully NaN-poisoned output, returned when a quantizer receives NaN
+/// input: stochastic rounding would otherwise silently launder NaN into
+/// finite garbage (`sr(NaN).max(0.0) == 0.0`), hiding a diverged
+/// gradient from every downstream consumer.
+pub(crate) fn poisoned(rows: usize, cols: usize) -> Quantized {
+    Quantized {
+        codes: Mat::from_vec(rows, cols, vec![f32::NAN; rows * cols]),
+        deq: Mat::from_vec(rows, cols, vec![f32::NAN; rows * cols]),
+        row_bin_size: vec![f32::NAN; rows],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +158,86 @@ mod tests {
         }
         assert!(var["ptq"] > 3.0 * var["psq"], "{var:?}");
         assert!(var["psq"] > 2.0 * var["bhq"], "{var:?}");
+    }
+
+    /// Degenerate shapes (empty, zero-column, single-row) through every
+    /// quantizer at normal and 1-bit widths: no panics, shape preserved,
+    /// finite output.
+    #[test]
+    fn degenerate_shapes_never_panic() {
+        let mut rng = Pcg32::new(31, 0);
+        for (r, c) in [(0usize, 0usize), (0, 5), (5, 0), (1, 8)] {
+            let mut x = Mat::zeros(r, c);
+            for v in &mut x.data {
+                *v = rng.normal();
+            }
+            for q in GradQuantizer::ALL {
+                for bits in [1.0f32, 4.0] {
+                    let out = q.apply(&x, bits, &mut rng);
+                    assert_eq!((out.rows, out.cols), (r, c), "{q:?}");
+                    assert!(
+                        out.data.iter().all(|v| v.is_finite()),
+                        "{q:?} bits {bits} shape ({r},{c})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// All-zero gradients and constant tensors must reconstruct exactly
+    /// (BHQ up to its reflection round-trip, ~1e-3 relative).
+    #[test]
+    fn all_zero_and_constant_reconstruct_exactly() {
+        let mut rng = Pcg32::new(33, 0);
+        let zero = Mat::zeros(4, 8);
+        for q in GradQuantizer::ALL {
+            for bits in [1.0f32, 5.0] {
+                let out = q.apply(&zero, bits, &mut rng);
+                assert!(
+                    out.data.iter().all(|&v| v == 0.0),
+                    "{q:?} bits {bits} not exact on zeros"
+                );
+            }
+        }
+        let constant = Mat::from_vec(3, 5, vec![2.5; 15]);
+        for q in GradQuantizer::ALL {
+            let tol = if q == GradQuantizer::Bhq { 1e-3 } else { 1e-6 };
+            let out = q.apply(&constant, 5.0, &mut rng);
+            for &v in &out.data {
+                assert!((v - 2.5).abs() < tol, "{q:?}: {v} != 2.5");
+            }
+        }
+    }
+
+    /// Codes stay in [0, B] and integral even at bits = 1 (B = 1).
+    #[test]
+    fn codes_stay_in_range_at_one_bit() {
+        let mut rng = Pcg32::new(35, 0);
+        let mut x = Mat::zeros(4, 8);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let b = nbins(1.0);
+        assert_eq!(b, 1.0);
+        let qp = ptq::quantize(&x, b, &mut rng);
+        let qs = psq::quantize(&x, b, &mut rng);
+        for (name, q) in [("ptq", &qp), ("psq", &qs)] {
+            for &c in &q.codes.data {
+                assert!(
+                    (0.0..=b).contains(&c) && c.fract() == 0.0,
+                    "{name} code {c} outside [0, {b}]"
+                );
+            }
+        }
+        // BHQ codes are clipped at 0 but one-sided above (clamping the
+        // top would bias the estimator): non-negative, finite, integral.
+        let qb = bhq::quantize(&x, b, &mut rng);
+        for &c in &qb.codes.data {
+            assert!(
+                c >= 0.0 && c.is_finite() && c.fract() == 0.0,
+                "bhq code {c}"
+            );
+        }
     }
 
     /// Each fewer bit multiplies PTQ variance by ~4 (Eq. 10 discussion).

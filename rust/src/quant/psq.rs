@@ -19,19 +19,31 @@ pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
     let mut bins = Vec::with_capacity(x.rows);
     for i in 0..x.rows {
         let (lo, hi) = mm[i];
+        // NaN row: poison that row only (clean rows are still usable —
+        // the per-sample axis isolates a diverged sample's gradient).
+        if (hi - lo).is_nan() {
+            bins.push(f32::NAN);
+            for c in codes.row_mut(i) {
+                *c = f32::NAN;
+            }
+            for d in deq.row_mut(i) {
+                *d = f32::NAN;
+            }
+            continue;
+        }
         let range = (hi - lo).max(EPS_RANGE);
         let scale = (nbins / range).min(MAX_SCALE);
         bins.push(1.0 / scale);
         let src = x.row(i);
         let crow = codes.row_mut(i);
-        for j in 0..src.len() {
-            let t = scale * (src[j] - lo);
-            crow[j] = sr::sr(t, rng).clamp(0.0, nbins);
+        for (c, &v) in crow.iter_mut().zip(src) {
+            let t = scale * (v - lo);
+            *c = sr::sr(t, rng).clamp(0.0, nbins);
         }
         let drow = deq.row_mut(i);
         let crow = codes.row(i);
-        for j in 0..drow.len() {
-            drow[j] = crow[j] / scale + lo;
+        for (d, &c) in drow.iter_mut().zip(crow) {
+            *d = c / scale + lo;
         }
     }
     Quantized {
@@ -116,6 +128,23 @@ mod tests {
         vs /= f64::from(reps);
         assert!(vs <= variance_bound(&x, b));
         assert!(vs < vp, "psq {vs} !< ptq {vp}");
+    }
+
+    #[test]
+    fn nan_row_poisoned_clean_rows_untouched() {
+        let mut x = skewed(4, 8, 3);
+        x.row_mut(1)[5] = f32::NAN;
+        let mut rng = Pcg32::new(7, 7);
+        let q = quantize(&x, 15.0, &mut rng);
+        assert!(q.deq.row(1).iter().all(|v| v.is_nan()));
+        assert!(q.row_bin_size[1].is_nan());
+        for i in [0usize, 2, 3] {
+            assert!(q.deq.row(i).iter().all(|v| v.is_finite()), "row {i}");
+            let bin = q.row_bin_size[i];
+            for (d, v) in q.deq.row(i).iter().zip(x.row(i)) {
+                assert!((d - v).abs() <= bin * 1.001);
+            }
+        }
     }
 
     #[test]

@@ -10,9 +10,14 @@ use super::{Mat, Quantized, EPS_RANGE, MAX_SCALE};
 use crate::quant::sr;
 use crate::util::rng::Pcg32;
 
-/// Stochastic PTQ quantize-dequantize with `nbins` = B bins.
+/// Stochastic PTQ quantize-dequantize with `nbins` = B bins. NaN input
+/// returns a fully NaN-poisoned output (see [`super::poisoned`]): the
+/// `.max(EPS_RANGE)` floor would otherwise swallow a NaN range.
 pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
     let (lo, hi) = x.minmax();
+    if (hi - lo).is_nan() {
+        return super::poisoned(x.rows, x.cols);
+    }
     let range = (hi - lo).max(EPS_RANGE);
     let scale = (nbins / range).min(MAX_SCALE);
     let mut codes = Mat::zeros(x.rows, x.cols);
@@ -106,6 +111,16 @@ mod tests {
         for (&d, &v) in a.data.iter().zip(&x.data) {
             assert!((d - v).abs() <= bin / 2.0 + 1e-6);
         }
+    }
+
+    #[test]
+    fn nan_input_poisons_output() {
+        let x = Mat::from_vec(2, 2, vec![1.0, f32::NAN, 0.5, -0.5]);
+        let mut rng = Pcg32::new(3, 3);
+        let q = quantize(&x, 15.0, &mut rng);
+        assert!(q.deq.data.iter().all(|v| v.is_nan()));
+        assert!(q.codes.data.iter().all(|v| v.is_nan()));
+        assert!(q.row_bin_size.iter().all(|v| v.is_nan()));
     }
 
     #[test]

@@ -64,44 +64,34 @@ impl Mat {
         self.data.is_empty()
     }
 
-    /// (min, max) of the whole tensor. Empty -> (0, 0).
+    /// (min, max) of the whole tensor. Empty -> (0, 0); any NaN element
+    /// -> (NaN, NaN). `f32::min`/`max` silently *drop* NaN operands, so
+    /// a naive fold would hand a poisoned gradient to the quantizers as
+    /// a plausible-looking finite range — propagate instead so callers
+    /// can fail loudly.
     pub fn minmax(&self) -> (f32, f32) {
-        let mut lo = f32::INFINITY;
-        let mut hi = f32::NEG_INFINITY;
-        for &v in &self.data {
-            lo = lo.min(v);
-            hi = hi.max(v);
-        }
-        if lo > hi {
-            (0.0, 0.0)
-        } else {
-            (lo, hi)
-        }
+        minmax_slice(&self.data)
     }
 
-    /// Per-row (min, max).
+    /// Per-row (min, max); NaN rows yield (NaN, NaN).
     pub fn row_minmax(&self) -> Vec<(f32, f32)> {
-        (0..self.rows)
-            .map(|i| {
-                let mut lo = f32::INFINITY;
-                let mut hi = f32::NEG_INFINITY;
-                for &v in self.row(i) {
-                    lo = lo.min(v);
-                    hi = hi.max(v);
-                }
-                if lo > hi {
-                    (0.0, 0.0)
-                } else {
-                    (lo, hi)
-                }
-            })
-            .collect()
+        (0..self.rows).map(|i| minmax_slice(self.row(i))).collect()
     }
 
-    /// Per-row infinity norm |row|_inf (the BHQ magnitude key).
+    /// Per-row infinity norm |row|_inf (the BHQ magnitude key). NaN rows
+    /// yield NaN, matching `minmax`'s propagation contract.
     pub fn row_absmax(&self) -> Vec<f32> {
         (0..self.rows)
-            .map(|i| self.row(i).iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+            .map(|i| {
+                let mut m = 0.0f32;
+                for &v in self.row(i) {
+                    if v.is_nan() {
+                        return f32::NAN;
+                    }
+                    m = m.max(v.abs());
+                }
+                m
+            })
             .collect()
     }
 
@@ -121,6 +111,23 @@ impl Mat {
                 d * d
             })
             .sum()
+    }
+}
+
+fn minmax_slice(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in xs {
+        if v.is_nan() {
+            return (f32::NAN, f32::NAN);
+        }
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if lo > hi {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
     }
 }
 
@@ -154,5 +161,31 @@ mod tests {
     #[should_panic]
     fn ragged_rows_panic() {
         Mat::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    /// Regression: the seed fold dropped NaN through `f32::min`/`max`,
+    /// reporting a finite (min, max) for a poisoned tensor.
+    #[test]
+    fn nan_propagates_through_reductions() {
+        let m = Mat::from_vec(2, 3, vec![1.0, f32::NAN, 3.0, 0.0, 5.0, -1.0]);
+        let (lo, hi) = m.minmax();
+        assert!(lo.is_nan() && hi.is_nan());
+        let rows = m.row_minmax();
+        assert!(rows[0].0.is_nan() && rows[0].1.is_nan());
+        // clean rows stay exact
+        assert_eq!(rows[1], (-1.0, 5.0));
+        let abs = m.row_absmax();
+        assert!(abs[0].is_nan());
+        assert_eq!(abs[1], 5.0);
+    }
+
+    #[test]
+    fn empty_reductions_stay_zero() {
+        let m = Mat::zeros(0, 4);
+        assert_eq!(m.minmax(), (0.0, 0.0));
+        assert!(m.row_minmax().is_empty());
+        let wide = Mat::zeros(2, 0);
+        assert_eq!(wide.row_minmax(), vec![(0.0, 0.0); 2]);
+        assert_eq!(wide.row_absmax(), vec![0.0; 2]);
     }
 }

@@ -1,9 +1,15 @@
-//! Executable wrapper: HLO text -> PJRT compile -> validated execute.
+//! Backend-agnostic executor: the [`ExecutorBackend`] trait plus the
+//! validating [`Executor`] facade every coordinator-layer caller holds.
+//!
+//! The facade owns all ABI checking (arity, per-tensor numel, dtype,
+//! output arity/numel) against the artifact's JSON metadata, so a
+//! backend only ever sees inputs that already match the declared
+//! signature and callers get identical error surfaces regardless of
+//! which backend runs the step.
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
 use super::artifact::ArtifactMeta;
-use super::Runtime;
 
 /// Host-side tensor crossing the ABI.
 #[derive(Clone, Debug)]
@@ -37,59 +43,36 @@ impl HostTensor {
             HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
         }
     }
-
-    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
-        if shape.is_empty() {
-            // rank-0 scalar
-            return Ok(match self {
-                HostTensor::F32(v) => xla::Literal::scalar(v[0]),
-                HostTensor::I32(v) => xla::Literal::scalar(v[0]),
-            });
-        }
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostTensor::F32(v) => xla::Literal::vec1(v),
-            HostTensor::I32(v) => xla::Literal::vec1(v),
-        };
-        if shape.len() == 1 && lit.element_count() == shape[0] {
-            return Ok(lit);
-        }
-        Ok(lit.reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        use xla::ElementType;
-        match lit.ty()? {
-            ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?)),
-            ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?)),
-            other => bail!("unsupported output element type {other:?}"),
-        }
-    }
 }
 
 /// Outputs of one step execution, in ABI order.
 pub type StepOutputs = Vec<HostTensor>;
 
-/// One compiled artifact, ready to execute.
+/// One way of executing a step artifact. Implementations receive inputs
+/// the facade has already validated against `meta.inputs` and must
+/// return outputs in `meta.outputs` order (the facade re-checks arity
+/// and numel on the way out).
+pub trait ExecutorBackend {
+    /// Short backend identifier for logs ("native", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Run one step.
+    fn execute(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<StepOutputs>;
+}
+
+/// One loaded artifact, ready to execute on some backend.
 pub struct Executor {
     pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
+    backend: Box<dyn ExecutorBackend>,
 }
 
 impl Executor {
-    /// Load the artifact's HLO text and compile it on the PJRT client.
-    pub fn load(rt: &Runtime, meta: &ArtifactMeta) -> Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
-            .with_context(|| format!("loading {}", meta.hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = rt
-            .client()
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", meta.key()))?;
-        Ok(Self {
-            meta: meta.clone(),
-            exe,
-        })
+    pub fn new(meta: ArtifactMeta, backend: Box<dyn ExecutorBackend>) -> Self {
+        Self { meta, backend }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Execute with validated inputs; returns decomposed tuple outputs.
@@ -102,7 +85,6 @@ impl Executor {
                 inputs.len()
             );
         }
-        let mut lits = Vec::with_capacity(inputs.len());
         for (i, (t, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
             if t.len() != spec.numel() {
                 bail!(
@@ -123,30 +105,36 @@ impl Executor {
                     if is_i32 { "i32" } else { "f32" }
                 );
             }
-            lits.push(t.to_literal(&spec.shape)?);
         }
-        let result = self.exe.execute::<xla::Literal>(&lits)?;
-        let tuple = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("empty execution result"))?
-            .to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != self.meta.outputs.len() {
+        let outputs = self.backend.execute(&self.meta, inputs)?;
+        if outputs.len() != self.meta.outputs.len() {
             bail!(
                 "{}: expected {} outputs, got {}",
                 self.meta.key(),
                 self.meta.outputs.len(),
-                parts.len()
+                outputs.len()
             );
         }
-        parts.iter().map(HostTensor::from_literal).collect()
+        for (i, (t, spec)) in outputs.iter().zip(&self.meta.outputs).enumerate() {
+            if t.len() != spec.numel() {
+                bail!(
+                    "{} output {i}: expected {} elements {:?}, got {}",
+                    self.meta.key(),
+                    spec.numel(),
+                    spec.shape,
+                    t.len()
+                );
+            }
+        }
+        Ok(outputs)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::artifact::{StepKind, TensorSpec};
+    use std::path::PathBuf;
 
     #[test]
     fn host_tensor_accessors() {
@@ -158,19 +146,69 @@ mod tests {
         assert!(i.as_f32().is_err());
     }
 
-    #[test]
-    fn literal_roundtrip_f32() {
-        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let lit = t.to_literal(&[2, 3]).unwrap();
-        assert_eq!(lit.element_count(), 6);
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    /// Backend that echoes its f32 inputs back, for facade validation tests.
+    struct Echo;
+
+    impl ExecutorBackend for Echo {
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+        fn execute(&self, _meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<StepOutputs> {
+            Ok(inputs.to_vec())
+        }
+    }
+
+    fn spec(shape: &[usize], dtype: &str) -> TensorSpec {
+        TensorSpec {
+            shape: shape.to_vec(),
+            dtype: dtype.to_string(),
+        }
+    }
+
+    fn echo_exec() -> Executor {
+        let meta = ArtifactMeta {
+            model: "m".into(),
+            variant: "v".into(),
+            step: StepKind::Train,
+            n_params: 2,
+            batch: 1,
+            input_shape: vec![2],
+            input_dtype: "float32".into(),
+            inputs: vec![spec(&[2], "float32"), spec(&[], "int32")],
+            outputs: vec![spec(&[2], "float32"), spec(&[], "int32")],
+            probe_shape: vec![2],
+            momentum: 0.9,
+            hlo_path: PathBuf::from("echo.hlo.txt"),
+        };
+        Executor::new(meta, Box::new(Echo))
     }
 
     #[test]
-    fn literal_scalar_shape() {
-        let t = HostTensor::F32(vec![7.5]);
-        let lit = t.to_literal(&[]).unwrap();
-        assert_eq!(lit.element_count(), 1);
+    fn facade_validates_and_dispatches() {
+        let exec = echo_exec();
+        assert_eq!(exec.backend_name(), "echo");
+        let out = exec
+            .run(&[HostTensor::F32(vec![1.0, 2.0]), HostTensor::I32(vec![3])])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_f32().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn facade_rejects_bad_arity_numel_dtype() {
+        let exec = echo_exec();
+        // arity
+        assert!(exec.run(&[HostTensor::F32(vec![1.0, 2.0])]).is_err());
+        // numel
+        assert!(exec
+            .run(&[HostTensor::F32(vec![1.0]), HostTensor::I32(vec![3])])
+            .is_err());
+        // dtype
+        assert!(exec
+            .run(&[
+                HostTensor::F32(vec![1.0, 2.0]),
+                HostTensor::F32(vec![3.0])
+            ])
+            .is_err());
     }
 }

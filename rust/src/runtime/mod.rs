@@ -1,17 +1,27 @@
-//! PJRT runtime (S7): load AOT artifacts, validate their ABI metadata,
-//! compile once, execute many times from the L3 hot loop.
+//! Runtime (S7): load AOT artifacts, validate their ABI metadata, and
+//! execute step functions from the L3 hot loop through a pluggable
+//! backend (see DESIGN.md for the trait + feature matrix).
 //!
-//! Interchange is HLO *text* (see DESIGN.md §2): jax >= 0.5 emits protos
-//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids. Python never runs at request time — the Rust
-//! binary is self-contained once `make artifacts` has populated
-//! `artifacts/`.
+//! Two backends implement [`ExecutorBackend`]:
+//!
+//!  * **native** (always available) — a pure-Rust interpreter for the
+//!    `mlp` artifacts' forward/backward, reusing the native quantizer
+//!    stack. Keeps the whole experiment pipeline runnable on machines
+//!    without an XLA toolchain.
+//!  * **pjrt** (`--features pjrt`) — compiles the artifacts' HLO text on
+//!    the XLA CPU client. The offline build links a vendored stub that
+//!    type-checks this path but reports PJRT unavailable at boot, so
+//!    [`Runtime::cpu`] silently falls back to the native interpreter.
 
 pub mod artifact;
 pub mod executor;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::{ArtifactMeta, Registry, StepKind, TensorSpec};
-pub use executor::{Executor, HostTensor, StepOutputs};
+pub use executor::{Executor, ExecutorBackend, HostTensor, StepOutputs};
+pub use native::{MlpSpec, NativeExecutor};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -19,44 +29,78 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-/// Shared PJRT CPU client + executable cache. One per process; XLA
-/// compilation of an artifact is paid once per (model, variant, step)
+enum Backend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtRuntime),
+}
+
+/// Backend selector + executor cache. One per process; building an
+/// executor for an artifact is paid once per (model, variant, step)
 /// even across many experiment runs (the Table-1 sweep reuses one
-/// compiled train step for all bitwidths — `bits` is a runtime input).
+/// train step for all bitwidths — `bits` is a runtime input).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
     cache: RefCell<HashMap<String, Arc<Executor>>>,
 }
 
 impl Runtime {
+    /// Preferred constructor: PJRT CPU client when the `pjrt` feature is
+    /// enabled *and* real bindings are linked, native interpreter
+    /// otherwise. Infallible in practice; the `Result` is kept so call
+    /// sites are stable across backends.
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            client,
-            cache: RefCell::new(HashMap::new()),
-        })
+        #[cfg(feature = "pjrt")]
+        match pjrt::PjrtRuntime::cpu() {
+            Ok(rt) => {
+                return Ok(Self {
+                    backend: Backend::Pjrt(rt),
+                    cache: RefCell::new(HashMap::new()),
+                })
+            }
+            Err(e) => {
+                eprintln!("[runtime] PJRT unavailable ({e:#}); using native interpreter");
+            }
+        }
+        Ok(Self::native())
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
+    /// Force the native interpreter backend.
+    pub fn native() -> Self {
+        Self {
+            backend: Backend::Native,
+            cache: RefCell::new(HashMap::new()),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native => "native".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.platform(),
+        }
     }
 
-    /// Load-or-reuse the compiled executable for an artifact.
+    /// Load-or-reuse the executor for an artifact.
     pub fn executor(&self, meta: &ArtifactMeta) -> Result<Arc<Executor>> {
         let key = meta.key();
         if let Some(e) = self.cache.borrow().get(&key) {
             return Ok(e.clone());
         }
-        let t0 = std::time::Instant::now();
-        let exec = Arc::new(Executor::load(self, meta)?);
-        eprintln!(
-            "[runtime] compiled {key} in {:.1}s",
-            t0.elapsed().as_secs_f64()
-        );
+        let backend: Box<dyn ExecutorBackend> = match &self.backend {
+            Backend::Native => Box::new(NativeExecutor),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => {
+                let t0 = std::time::Instant::now();
+                let b = Box::new(rt.load(meta)?);
+                eprintln!(
+                    "[runtime] compiled {key} in {:.1}s",
+                    t0.elapsed().as_secs_f64()
+                );
+                b
+            }
+        };
+        let exec = Arc::new(Executor::new(meta.clone(), backend));
         self.cache.borrow_mut().insert(key, exec.clone());
         Ok(exec)
     }
@@ -67,8 +111,24 @@ mod tests {
     use super::*;
 
     #[test]
-    fn cpu_client_boots() {
-        let rt = Runtime::cpu().expect("pjrt cpu client");
-        assert_eq!(rt.platform(), "cpu");
+    fn runtime_boots_and_reports_platform() {
+        let rt = Runtime::cpu().expect("runtime boots");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn native_runtime_builds_cached_executors() {
+        let rt = Runtime::native();
+        assert_eq!(rt.platform(), "native");
+        let dir = std::env::temp_dir().join(format!("sq_rt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        native::write_artifacts(&dir, &MlpSpec::default()).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let meta = reg.meta("mlp", "ptq", StepKind::Train).unwrap();
+        let a = rt.executor(meta).unwrap();
+        let b = rt.executor(meta).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "executor cache must dedupe");
+        assert_eq!(a.backend_name(), "native");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,758 @@
+//! Native interpreter backend: a pure-Rust implementation of the probe
+//! artifacts' two-layer MLP forward/backward, so the coordinator,
+//! experiments, and data-parallel stack run end-to-end on machines
+//! without an XLA/PJRT toolchain.
+//!
+//! The interpreter reuses the native quantizer stack ([`crate::quant`]):
+//! FQT variants quantize the backward signal matrices (the logit
+//! gradient and the hidden-layer gradient, one sample per row — the
+//! paper's per-sample axis) with stochastic rounding, so Theorem-1
+//! unbiasedness and the §4 variance ordering hold through this backend
+//! exactly as through the lowered HLO.
+//!
+//! Artifact files are the same `.json` sidecars the Python AOT pipeline
+//! writes (plus placeholder `.hlo.txt` files, since there is no HLO to
+//! lower offline); [`write_artifacts`] generates a complete `mlp` set so
+//! a clean checkout can produce runnable artifacts with
+//! `statquant gen-artifacts`.
+//!
+//! Parameter layout (flat f32 vector, matching the sidecar `n_params`):
+//! `W1 (in_dim x hidden) | b1 (hidden) | W2 (hidden x classes) | b2 (classes)`
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{ArtifactMeta, StepKind};
+use super::executor::{ExecutorBackend, HostTensor, StepOutputs};
+use crate::quant::{GradQuantizer, Mat};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+
+/// Model geometry for artifact generation.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpSpec {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    /// Seed for the He-initialised parameter vector.
+    pub seed: u64,
+}
+
+impl Default for MlpSpec {
+    fn default() -> Self {
+        Self {
+            in_dim: 64,
+            hidden: 32,
+            classes: 10,
+            batch: 64,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl MlpSpec {
+    pub fn n_params(&self) -> usize {
+        self.in_dim * self.hidden
+            + self.hidden
+            + self.hidden * self.classes
+            + self.classes
+    }
+}
+
+/// Variants emitted by [`write_artifacts`] (train + probe each).
+pub const VARIANTS: [&str; 5] = ["exact", "qat", "ptq", "psq", "bhq"];
+
+/// Geometry recovered from an artifact's ABI metadata — the sidecar
+/// schema carries no explicit layer sizes, but for the two-layer MLP
+/// they are all determined by `input_shape`, `probe_shape`, `n_params`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct MlpDims {
+    batch: usize,
+    in_dim: usize,
+    hidden: usize,
+    classes: usize,
+}
+
+impl MlpDims {
+    fn infer(meta: &ArtifactMeta) -> Result<Self> {
+        if meta.model != "mlp" {
+            bail!(
+                "native backend only interprets the `mlp` model (artifact is `{}`); \
+                 build with `--features pjrt` and real XLA bindings for other models",
+                meta.model
+            );
+        }
+        if meta.input_shape.len() < 2 {
+            bail!("mlp input_shape {:?} must be [batch, dims...]", meta.input_shape);
+        }
+        let batch = meta.input_shape[0];
+        let in_dim: usize = meta.input_shape[1..].iter().product();
+        if meta.probe_shape.len() != 2 || meta.probe_shape[0] != batch {
+            bail!(
+                "probe_shape {:?} must be [batch={batch}, hidden]",
+                meta.probe_shape
+            );
+        }
+        let hidden = meta.probe_shape[1];
+        if batch == 0 || in_dim == 0 || hidden == 0 {
+            bail!("degenerate mlp dims: batch {batch}, in_dim {in_dim}, hidden {hidden}");
+        }
+        let rem = meta
+            .n_params
+            .checked_sub(hidden * (in_dim + 1))
+            .ok_or_else(|| anyhow!("n_params {} too small for layer 1", meta.n_params))?;
+        if rem % (hidden + 1) != 0 {
+            bail!(
+                "n_params {} inconsistent with in_dim {in_dim}, hidden {hidden}",
+                meta.n_params
+            );
+        }
+        let classes = rem / (hidden + 1);
+        if classes < 2 {
+            bail!("inferred classes {classes} < 2");
+        }
+        Ok(Self {
+            batch,
+            in_dim,
+            hidden,
+            classes,
+        })
+    }
+}
+
+/// Cached intermediates of one forward pass.
+struct Forward {
+    /// Pre-activation of the hidden layer (batch x hidden) — the relu
+    /// mask for the backward pass and the activation-gradient tap.
+    h_pre: Mat,
+    /// Post-relu hidden activations (batch x hidden).
+    h: Mat,
+    /// Softmax probabilities (batch x classes).
+    probs: Mat,
+    loss: f64,
+    acc: f64,
+}
+
+fn split_params(dims: &MlpDims, params: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (w1, rest) = params.split_at(dims.in_dim * dims.hidden);
+    let (b1, rest) = rest.split_at(dims.hidden);
+    let (w2, b2) = rest.split_at(dims.hidden * dims.classes);
+    (w1.to_vec(), b1.to_vec(), w2.to_vec(), b2.to_vec())
+}
+
+fn forward(dims: &MlpDims, params: &[f32], x: &[f32], y: &[i32]) -> Result<Forward> {
+    let (w1, b1, w2, b2) = split_params(dims, params);
+    let (bsz, h_dim, c_dim) = (dims.batch, dims.hidden, dims.classes);
+    let mut h_pre = Mat::zeros(bsz, h_dim);
+    let mut h = Mat::zeros(bsz, h_dim);
+    let mut probs = Mat::zeros(bsz, c_dim);
+    let mut loss = 0.0f64;
+    let mut correct = 0u64;
+    for i in 0..bsz {
+        let label = y[i];
+        if label < 0 || label as usize >= c_dim {
+            bail!("label {label} out of range [0, {c_dim})");
+        }
+        let xi = &x[i * dims.in_dim..(i + 1) * dims.in_dim];
+        let hp = h_pre.row_mut(i);
+        hp.copy_from_slice(&b1);
+        for (&xv, w1_row) in xi.iter().zip(w1.chunks(h_dim)) {
+            for (o, &w) in hp.iter_mut().zip(w1_row) {
+                *o += xv * w;
+            }
+        }
+        let hr = h.row_mut(i);
+        for (a, &p) in hr.iter_mut().zip(h_pre.row(i)) {
+            *a = p.max(0.0);
+        }
+        let mut logits = b2.clone();
+        for (&hv, w2_row) in h.row(i).iter().zip(w2.chunks(c_dim)) {
+            for (o, &w) in logits.iter_mut().zip(w2_row) {
+                *o += hv * w;
+            }
+        }
+        // numerically stable softmax cross-entropy
+        let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let sum_exp: f64 = logits.iter().map(|&v| f64::from(v - m).exp()).sum();
+        let lse = f64::from(m) + sum_exp.ln();
+        loss += lse - f64::from(logits[label as usize]);
+        let mut argmax = 0usize;
+        for (c, (pv, &lv)) in probs.row_mut(i).iter_mut().zip(&logits).enumerate() {
+            *pv = (f64::from(lv) - lse).exp() as f32;
+            if lv > logits[argmax] {
+                argmax = c;
+            }
+        }
+        if argmax == label as usize {
+            correct += 1;
+        }
+    }
+    Ok(Forward {
+        h_pre,
+        h,
+        probs,
+        loss: loss / bsz as f64,
+        acc: correct as f64 / bsz as f64,
+    })
+}
+
+/// Backward pass. FQT variants pass `Some((quantizer, bits))`, which
+/// quantizes the logit-gradient and hidden-gradient matrices with SR
+/// (unbiased, per Theorem 1). Returns the flat gradient in parameter
+/// layout plus the (post-relu-mask, pre-quantization) hidden gradient —
+/// the actgrad tap.
+fn backward(
+    dims: &MlpDims,
+    params: &[f32],
+    x: &[f32],
+    fwd: &Forward,
+    y: &[i32],
+    quant: Option<(GradQuantizer, f32)>,
+    rng: &mut Pcg32,
+) -> (Vec<f32>, Mat) {
+    let (bsz, d_dim, h_dim, c_dim) = (dims.batch, dims.in_dim, dims.hidden, dims.classes);
+    let (_w1, _b1, w2, _b2) = split_params(dims, params);
+
+    // G = (softmax - onehot) / batch, one sample per row.
+    let mut g = fwd.probs.clone();
+    let inv_b = 1.0 / bsz as f32;
+    for (i, &label) in y.iter().enumerate() {
+        let row = g.row_mut(i);
+        row[label as usize] -= 1.0;
+        for v in row.iter_mut() {
+            *v *= inv_b;
+        }
+    }
+    let g = match quant {
+        Some((q, bits)) => q.apply(&g, bits, rng),
+        None => g,
+    };
+
+    let mut dw2 = vec![0.0f32; h_dim * c_dim];
+    let mut db2 = vec![0.0f32; c_dim];
+    let mut g_a = Mat::zeros(bsz, h_dim);
+    for i in 0..bsz {
+        let gi = g.row(i);
+        for (&hv, dw2_row) in fwd.h.row(i).iter().zip(dw2.chunks_mut(c_dim)) {
+            for (o, &gv) in dw2_row.iter_mut().zip(gi) {
+                *o += hv * gv;
+            }
+        }
+        for (o, &gv) in db2.iter_mut().zip(gi) {
+            *o += gv;
+        }
+        for (o, w2_row) in g_a.row_mut(i).iter_mut().zip(w2.chunks(c_dim)) {
+            *o = w2_row.iter().zip(gi).map(|(&w, &gv)| w * gv).sum();
+        }
+    }
+
+    // relu mask at the tap
+    let mut g_h = g_a;
+    for (v, &p) in g_h.data.iter_mut().zip(&fwd.h_pre.data) {
+        if p <= 0.0 {
+            *v = 0.0;
+        }
+    }
+    let g_hq = match quant {
+        Some((q, bits)) => q.apply(&g_h, bits, rng),
+        None => g_h.clone(),
+    };
+
+    let mut dw1 = vec![0.0f32; d_dim * h_dim];
+    let mut db1 = vec![0.0f32; h_dim];
+    for i in 0..bsz {
+        let gi = g_hq.row(i);
+        let xi = &x[i * d_dim..(i + 1) * d_dim];
+        for (&xv, dw1_row) in xi.iter().zip(dw1.chunks_mut(h_dim)) {
+            for (o, &gv) in dw1_row.iter_mut().zip(gi) {
+                *o += xv * gv;
+            }
+        }
+        for (o, &gv) in db1.iter_mut().zip(gi) {
+            *o += gv;
+        }
+    }
+
+    let mut grad = Vec::with_capacity(dims_len(dims));
+    grad.extend_from_slice(&dw1);
+    grad.extend_from_slice(&db1);
+    grad.extend_from_slice(&dw2);
+    grad.extend_from_slice(&db2);
+    (grad, g_h)
+}
+
+fn dims_len(dims: &MlpDims) -> usize {
+    dims.in_dim * dims.hidden + dims.hidden + dims.hidden * dims.classes + dims.classes
+}
+
+fn quantizer_for(variant: &str) -> Result<Option<GradQuantizer>> {
+    match variant {
+        "exact" | "qat" => Ok(None),
+        v => match GradQuantizer::from_name(v) {
+            Some(q) => Ok(Some(q)),
+            None => bail!("native backend: unknown variant `{v}`"),
+        },
+    }
+}
+
+fn scalar_f32(t: &HostTensor) -> Result<f32> {
+    Ok(t.as_f32()?[0])
+}
+
+fn labels(t: &HostTensor) -> Result<&[i32]> {
+    match t {
+        HostTensor::I32(v) => Ok(v),
+        HostTensor::F32(_) => bail!("expected int32 labels"),
+    }
+}
+
+/// The seed lane is a *bit-pattern carrier*: callers may pack a full u32
+/// (`f32::from_bits`) or pass a small integral float — either way the
+/// raw bits key the SR noise stream, so distinct bit patterns give
+/// independent draws and equal patterns replay exactly.
+fn seed_rng(seed: f32) -> Pcg32 {
+    Pcg32::new(u64::from(seed.to_bits()), 1013)
+}
+
+/// Stateless interpreter for the `mlp` artifacts. One instance per
+/// [`Executor`](super::Executor); dispatch is on the artifact metadata.
+pub struct NativeExecutor;
+
+impl ExecutorBackend for NativeExecutor {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<StepOutputs> {
+        let dims = MlpDims::infer(meta)?;
+        match meta.step {
+            StepKind::Train => train_step(meta, &dims, inputs),
+            StepKind::Probe => probe_step(meta, &dims, inputs),
+            StepKind::Eval => eval_step(&dims, inputs),
+            StepKind::ActGrad => actgrad_step(&dims, inputs),
+        }
+    }
+}
+
+/// (params, momentum, x, y, seed, lr, bits) -> (params', momentum', loss, acc)
+fn train_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+    let params = inputs[0].as_f32()?;
+    let mut velocity = inputs[1].as_f32()?.to_vec();
+    let x = inputs[2].as_f32()?;
+    let y = labels(&inputs[3])?;
+    let seed = scalar_f32(&inputs[4])?;
+    let lr = f64::from(scalar_f32(&inputs[5])?);
+    let bits = scalar_f32(&inputs[6])?;
+
+    let fwd = forward(dims, params, x, y)?;
+    let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
+    let mut rng = seed_rng(seed);
+    let (grad, _) = backward(dims, params, x, &fwd, y, quant, &mut rng);
+
+    let mu = meta.momentum;
+    let mut new_params = params.to_vec();
+    for ((pv, vv), &g) in new_params.iter_mut().zip(velocity.iter_mut()).zip(&grad) {
+        *vv = (mu * f64::from(*vv) + f64::from(g)) as f32;
+        *pv = (f64::from(*pv) - lr * f64::from(*vv)) as f32;
+    }
+    Ok(vec![
+        HostTensor::F32(new_params),
+        HostTensor::F32(velocity),
+        HostTensor::F32(vec![fwd.loss as f32]),
+        HostTensor::F32(vec![fwd.acc as f32]),
+    ])
+}
+
+/// (params, x, y, seed, bits) -> (loss, flat_grad)
+fn probe_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+    let params = inputs[0].as_f32()?;
+    let x = inputs[1].as_f32()?;
+    let y = labels(&inputs[2])?;
+    let seed = scalar_f32(&inputs[3])?;
+    let bits = scalar_f32(&inputs[4])?;
+
+    let fwd = forward(dims, params, x, y)?;
+    let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
+    let mut rng = seed_rng(seed);
+    let (grad, _) = backward(dims, params, x, &fwd, y, quant, &mut rng);
+    Ok(vec![
+        HostTensor::F32(vec![fwd.loss as f32]),
+        HostTensor::F32(grad),
+    ])
+}
+
+/// (params, x, y) -> (loss, acc) — deterministic.
+fn eval_step(dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+    let params = inputs[0].as_f32()?;
+    let x = inputs[1].as_f32()?;
+    let y = labels(&inputs[2])?;
+    let fwd = forward(dims, params, x, y)?;
+    Ok(vec![
+        HostTensor::F32(vec![fwd.loss as f32]),
+        HostTensor::F32(vec![fwd.acc as f32]),
+    ])
+}
+
+/// (params, x, y, seed) -> hidden-layer gradient tap (batch x hidden).
+fn actgrad_step(dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+    let params = inputs[0].as_f32()?;
+    let x = inputs[1].as_f32()?;
+    let y = labels(&inputs[2])?;
+    let fwd = forward(dims, params, x, y)?;
+    let mut rng = seed_rng(scalar_f32(&inputs[3])?);
+    let (_, g_h) = backward(dims, params, x, &fwd, y, None, &mut rng);
+    Ok(vec![HostTensor::F32(g_h.data)])
+}
+
+// ---------------------------------------------------------------------
+// Artifact generation
+// ---------------------------------------------------------------------
+
+fn tensor_json(shape: &[usize], dtype: &str) -> Json {
+    obj([
+        ("shape", shape.iter().copied().collect::<Json>()),
+        ("dtype", Json::from(dtype)),
+    ])
+}
+
+fn abi(spec: &MlpSpec, step: StepKind) -> (Vec<Json>, Vec<Json>) {
+    let n = spec.n_params();
+    let params = || tensor_json(&[n], "float32");
+    let xs = || tensor_json(&[spec.batch, spec.in_dim], "float32");
+    let ys = || tensor_json(&[spec.batch], "int32");
+    let scalar = || tensor_json(&[], "float32");
+    match step {
+        StepKind::Train => (
+            vec![params(), params(), xs(), ys(), scalar(), scalar(), scalar()],
+            vec![params(), params(), scalar(), scalar()],
+        ),
+        StepKind::Probe => (
+            vec![params(), xs(), ys(), scalar(), scalar()],
+            vec![scalar(), params()],
+        ),
+        StepKind::Eval => (vec![params(), xs(), ys()], vec![scalar(), scalar()]),
+        StepKind::ActGrad => (
+            vec![params(), xs(), ys(), scalar()],
+            vec![tensor_json(&[spec.batch, spec.hidden], "float32")],
+        ),
+    }
+}
+
+fn write_sidecar(dir: &Path, spec: &MlpSpec, variant: &str, step: StepKind) -> Result<()> {
+    let (inputs, outputs) = abi(spec, step);
+    let j = obj([
+        ("model", Json::from("mlp")),
+        ("variant", Json::from(variant)),
+        ("step", Json::from(step.name())),
+        ("n_params", Json::from(spec.n_params())),
+        ("batch", Json::from(spec.batch)),
+        (
+            "input_shape",
+            [spec.batch, spec.in_dim].into_iter().collect::<Json>(),
+        ),
+        ("input_dtype", Json::from("float32")),
+        ("inputs", inputs.into_iter().collect::<Json>()),
+        ("outputs", outputs.into_iter().collect::<Json>()),
+        (
+            "probe_shape",
+            [spec.batch, spec.hidden].into_iter().collect::<Json>(),
+        ),
+        ("momentum", Json::from(0.9)),
+    ]);
+    let stem = format!("mlp_{variant}_{}", step.name());
+    std::fs::write(dir.join(format!("{stem}.json")), j.to_string_pretty())
+        .with_context(|| format!("writing {stem}.json"))?;
+    std::fs::write(
+        dir.join(format!("{stem}.hlo.txt")),
+        "// placeholder module: this artifact executes on the native interpreter\n\
+         // backend. Run the Python AOT pipeline to lower real HLO for PJRT.\n",
+    )
+    .with_context(|| format!("writing {stem}.hlo.txt"))?;
+    Ok(())
+}
+
+/// He-initialised flat parameter vector for the spec's MLP.
+pub fn init_params(spec: &MlpSpec) -> Vec<f32> {
+    let mut rng = Pcg32::new(spec.seed, 77);
+    let mut params = vec![0.0f32; spec.n_params()];
+    let (w1_end, b1_end) = (
+        spec.in_dim * spec.hidden,
+        spec.in_dim * spec.hidden + spec.hidden,
+    );
+    let w2_end = b1_end + spec.hidden * spec.classes;
+    let s1 = (2.0 / spec.in_dim as f32).sqrt();
+    for v in &mut params[..w1_end] {
+        *v = rng.normal() * s1;
+    }
+    let s2 = (2.0 / spec.hidden as f32).sqrt();
+    for v in &mut params[b1_end..w2_end] {
+        *v = rng.normal() * s2;
+    }
+    params
+}
+
+/// Write a complete native `mlp` artifact set into `dir`: train + probe
+/// sidecars for every variant in [`VARIANTS`], a `qat` eval and actgrad
+/// step, placeholder HLO files, and the He-initialised `mlp_init.bin`.
+pub fn write_artifacts(dir: &Path, spec: &MlpSpec) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    let params = init_params(spec);
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for v in &params {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(dir.join("mlp_init.bin"), bytes).context("writing mlp_init.bin")?;
+    for variant in VARIANTS {
+        write_sidecar(dir, spec, variant, StepKind::Train)?;
+        write_sidecar(dir, spec, variant, StepKind::Probe)?;
+    }
+    write_sidecar(dir, spec, "qat", StepKind::Eval)?;
+    write_sidecar(dir, spec, "qat", StepKind::ActGrad)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Registry;
+
+    fn tiny_spec() -> MlpSpec {
+        MlpSpec {
+            in_dim: 5,
+            hidden: 4,
+            classes: 3,
+            batch: 6,
+            seed: 42,
+        }
+    }
+
+    fn tiny_meta(variant: &str, step: StepKind) -> ArtifactMeta {
+        let spec = tiny_spec();
+        ArtifactMeta {
+            model: "mlp".into(),
+            variant: variant.into(),
+            step,
+            n_params: spec.n_params(),
+            batch: spec.batch,
+            input_shape: vec![spec.batch, spec.in_dim],
+            input_dtype: "float32".into(),
+            inputs: vec![],
+            outputs: vec![],
+            probe_shape: vec![spec.batch, spec.hidden],
+            momentum: 0.9,
+            hlo_path: std::path::PathBuf::from("none.hlo.txt"),
+        }
+    }
+
+    fn tiny_batch(spec: &MlpSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg32::new(seed, 3);
+        let x: Vec<f32> = (0..spec.batch * spec.in_dim)
+            .map(|_| rng.normal())
+            .collect();
+        let y: Vec<i32> = (0..spec.batch)
+            .map(|_| rng.below(spec.classes as u32) as i32)
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn dims_inference_recovers_spec() {
+        let meta = tiny_meta("qat", StepKind::Probe);
+        let dims = MlpDims::infer(&meta).unwrap();
+        assert_eq!(
+            dims,
+            MlpDims {
+                batch: 6,
+                in_dim: 5,
+                hidden: 4,
+                classes: 3
+            }
+        );
+        let mut bad = tiny_meta("qat", StepKind::Probe);
+        bad.n_params += 1;
+        assert!(MlpDims::infer(&bad).is_err());
+        let mut cnn = tiny_meta("qat", StepKind::Probe);
+        cnn.model = "cnn".into();
+        assert!(MlpDims::infer(&cnn).is_err());
+    }
+
+    /// Central finite differences of the eval loss must match the
+    /// deterministic probe gradient coordinate-by-coordinate.
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let spec = tiny_spec();
+        let dims = MlpDims::infer(&tiny_meta("qat", StepKind::Probe)).unwrap();
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 9);
+        let fwd = forward(&dims, &params, &x, &y).unwrap();
+        let mut rng = Pcg32::new(0, 0);
+        let (grad, _) = backward(&dims, &params, &x, &fwd, &y, None, &mut rng);
+
+        let eps = 1e-2f32;
+        let mut fd = vec![0.0f64; params.len()];
+        for (i, slot) in fd.iter_mut().enumerate() {
+            let mut p = params.clone();
+            p[i] = params[i] + eps;
+            let up = forward(&dims, &p, &x, &y).unwrap().loss;
+            p[i] = params[i] - eps;
+            let dn = forward(&dims, &p, &x, &y).unwrap().loss;
+            *slot = (up - dn) / (2.0 * f64::from(eps));
+        }
+        let num: f64 = fd
+            .iter()
+            .zip(&grad)
+            .map(|(&a, &b)| (a - f64::from(b)).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = grad
+            .iter()
+            .map(|&g| f64::from(g) * f64::from(g))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            num < 1e-2 * den.max(1e-6),
+            "finite-diff mismatch: ||fd-g|| = {num}, ||g|| = {den}"
+        );
+    }
+
+    #[test]
+    fn probe_is_seed_deterministic_and_seed_sensitive() {
+        let spec = tiny_spec();
+        let meta = tiny_meta("ptq", StepKind::Probe);
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 4);
+        let run = |seed: f32| {
+            let inputs = [
+                HostTensor::F32(params.clone()),
+                HostTensor::F32(x.clone()),
+                HostTensor::I32(y.clone()),
+                HostTensor::F32(vec![seed]),
+                HostTensor::F32(vec![4.0]),
+            ];
+            NativeExecutor
+                .execute(&meta, &inputs)
+                .unwrap()
+                .pop()
+                .unwrap()
+                .into_f32()
+                .unwrap()
+        };
+        assert_eq!(run(3.0), run(3.0));
+        assert_ne!(run(3.0), run(4.0));
+    }
+
+    /// Thm 1 through the interpreter: E[FQT grad] equals the exact grad.
+    #[test]
+    fn fqt_probe_mean_matches_exact_gradient() {
+        let spec = tiny_spec();
+        let dims = MlpDims::infer(&tiny_meta("qat", StepKind::Probe)).unwrap();
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 11);
+        let fwd = forward(&dims, &params, &x, &y).unwrap();
+        let mut rng0 = Pcg32::new(0, 0);
+        let (g_ref, _) = backward(&dims, &params, &x, &fwd, &y, None, &mut rng0);
+
+        let seeds = 96;
+        let mut mean = vec![0.0f64; params.len()];
+        for k in 0..seeds {
+            let mut rng = seed_rng(k as f32);
+            let (g, _) = backward(
+                &dims,
+                &params,
+                &x,
+                &fwd,
+                &y,
+                Some((GradQuantizer::Ptq, 4.0)),
+                &mut rng,
+            );
+            for (m, &v) in mean.iter_mut().zip(&g) {
+                *m += f64::from(v) / f64::from(seeds);
+            }
+        }
+        let dot: f64 = mean.iter().zip(&g_ref).map(|(&a, &b)| a * f64::from(b)).sum();
+        let na = mean.iter().map(|&a| a * a).sum::<f64>().sqrt();
+        let nb = g_ref
+            .iter()
+            .map(|&b| f64::from(b) * f64::from(b))
+            .sum::<f64>()
+            .sqrt();
+        let cos = dot / (na * nb).max(1e-30);
+        assert!(cos > 0.95, "cos(E[fqt], exact) = {cos}");
+    }
+
+    #[test]
+    fn train_step_updates_state_and_reports_finite_loss() {
+        let spec = tiny_spec();
+        let meta = tiny_meta("psq", StepKind::Train);
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 21);
+        let inputs = [
+            HostTensor::F32(params.clone()),
+            HostTensor::F32(vec![0.0; params.len()]),
+            HostTensor::F32(x),
+            HostTensor::I32(y),
+            HostTensor::F32(vec![1.0]),
+            HostTensor::F32(vec![0.1]),
+            HostTensor::F32(vec![5.0]),
+        ];
+        let out = NativeExecutor.execute(&meta, &inputs).unwrap();
+        assert_eq!(out.len(), 4);
+        let new_params = out[0].as_f32().unwrap();
+        assert_ne!(new_params, &params[..]);
+        let loss = out[2].as_f32().unwrap()[0];
+        assert!(loss.is_finite() && loss > 0.0);
+        let acc = out[3].as_f32().unwrap()[0];
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn written_artifacts_load_and_execute() {
+        let dir = std::env::temp_dir().join(format!("sq_native_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = tiny_spec();
+        write_artifacts(&dir, &spec).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.init_params("mlp").unwrap().len(), spec.n_params());
+        for variant in VARIANTS {
+            for step in [StepKind::Train, StepKind::Probe] {
+                let meta = reg.meta("mlp", variant, step).unwrap();
+                assert!(meta.hlo_path.exists());
+                assert_eq!(meta.n_params, spec.n_params());
+            }
+        }
+        let meta = reg.meta("mlp", "qat", StepKind::Eval).unwrap().clone();
+        let (x, y) = tiny_batch(&spec, 2);
+        let out = NativeExecutor
+            .execute(
+                &meta,
+                &[
+                    HostTensor::F32(reg.init_params("mlp").unwrap()),
+                    HostTensor::F32(x),
+                    HostTensor::I32(y),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_labels() {
+        let spec = tiny_spec();
+        let meta = tiny_meta("qat", StepKind::Eval);
+        let (x, _) = tiny_batch(&spec, 2);
+        let bad_y = vec![spec.classes as i32; spec.batch];
+        let res = NativeExecutor.execute(
+            &meta,
+            &[
+                HostTensor::F32(init_params(&spec)),
+                HostTensor::F32(x),
+                HostTensor::I32(bad_y),
+            ],
+        );
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! PJRT/XLA backend (`--features pjrt`): HLO text -> PJRT compile ->
+//! execute on the XLA CPU client.
+//!
+//! Interchange is HLO *text* (see DESIGN.md): jax >= 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids. The offline build links the vendored
+//! `xla` stub, which compiles this module but reports PJRT unavailable
+//! at client-boot time so [`crate::runtime::Runtime`] falls back to the
+//! native interpreter.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::ArtifactMeta;
+use super::executor::{ExecutorBackend, HostTensor, StepOutputs};
+
+/// Shared PJRT CPU client; XLA compilation of an artifact is paid once
+/// per (model, variant, step) via the [`crate::runtime::Runtime`] cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load the artifact's HLO text and compile it on the PJRT client.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<PjrtBackend> {
+        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
+            .with_context(|| format!("loading {}", meta.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", meta.key()))?;
+        Ok(PjrtBackend { exe })
+    }
+}
+
+/// One compiled executable.
+pub struct PjrtBackend {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ExecutorBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<StepOutputs> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&meta.inputs) {
+            lits.push(to_literal(t, &spec.shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+fn to_literal(t: &HostTensor, shape: &[usize]) -> Result<xla::Literal> {
+    if shape.is_empty() {
+        // rank-0 scalar
+        return Ok(match t {
+            HostTensor::F32(v) => xla::Literal::scalar(v[0]),
+            HostTensor::I32(v) => xla::Literal::scalar(v[0]),
+        });
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32(v) => xla::Literal::vec1(v),
+        HostTensor::I32(v) => xla::Literal::vec1(v),
+    };
+    if shape.len() == 1 && lit.element_count() == shape[0] {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    use xla::ElementType;
+    match lit.ty()? {
+        ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?)),
+        ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?)),
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = to_literal(&t, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_scalar_shape() {
+        let t = HostTensor::F32(vec![7.5]);
+        let lit = to_literal(&t, &[]).unwrap();
+        assert_eq!(lit.element_count(), 1);
+    }
+}

@@ -28,7 +28,7 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.entry(k.to_string()).or_default().push(v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     let v = it.next().unwrap().clone();
                     out.flags.entry(name.to_string()).or_default().push(v);
                 } else {

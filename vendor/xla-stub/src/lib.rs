@@ -1,0 +1,261 @@
+//! Compile-time stand-in for the `xla` (PJRT) bindings.
+//!
+//! The real crate links `xla_extension`, which is not available in the
+//! offline build image. This stub mirrors the small API surface that
+//! `statquant::runtime::pjrt` uses so `cargo build --features pjrt`
+//! type-checks everywhere. [`Literal`] is fully functional (host-side
+//! data only); the client/compile/execute entry points return a runtime
+//! error directing the user to link the real bindings.
+//!
+//! To run against real PJRT, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual bindings crate — no `statquant`
+//! source changes are needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's role in `?` conversions.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real xla/PJRT bindings (this build links the offline stub; \
+         point the `xla` path dependency at the real crate)"
+    )))
+}
+
+/// Element dtypes we can cross the host ABI with. The extra variants
+/// exist so downstream `match` arms with a catch-all stay reachable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    S64,
+    Pred,
+    Bf16,
+}
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: scalars, dense arrays, and tuples.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Rust scalar types that map onto an XLA element type.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn wrap(vals: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(vals: Vec<Self>) -> Data {
+        Data::F32(vals)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(vals: Vec<Self>) -> Data {
+        Data::I32(vals)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-0 scalar.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            data: T::wrap(vec![v]),
+            dims: vec![],
+        }
+    }
+
+    /// Rank-1 array.
+    pub fn vec1<T: NativeType>(vs: &[T]) -> Literal {
+        Literal {
+            data: T::wrap(vs.to_vec()),
+            dims: vec![vs.len() as i64],
+        }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            data: Data::Tuple(parts),
+            dims: vec![],
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({} elements) from {} elements",
+                numel,
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.data {
+            Data::F32(_) => Ok(ElementType::F32),
+            Data::I32(_) => Ok(ElementType::S32),
+            Data::Tuple(_) => Err(Error("tuple literal has no element type".into())),
+        }
+    }
+
+    pub fn shape_dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error(format!("literal is not a {:?} array", T::TY)))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(t) => Ok(t.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        // Reading the file is cheap and gives callers the same
+        // missing-artifact error surface as the real crate.
+        std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto(()))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle (never constructible via the stub's client).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Errors in the stub so `statquant::Runtime::cpu()` falls back to
+    /// the native interpreter instead of failing later at compile time.
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_scalar_and_vec() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.ty().unwrap(), ElementType::F32);
+        let v = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(v.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert!(v.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn literal_reshape_checks_numel() {
+        let v = Literal::vec1(&[0.0f32; 6]);
+        assert_eq!(v.reshape(&[2, 3]).unwrap().shape_dims(), &[2, 3]);
+        assert!(v.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.ty().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
