@@ -1,0 +1,106 @@
+//! Bench: observability overhead — the ISSUE-7 acceptance gate that the
+//! instrumented hot loop stays within 5% of the uninstrumented baseline.
+//!
+//! Two layers:
+//!   * micro: one counter inc / gauge set / histogram observe / span
+//!     open+drop, obs enabled vs disabled (disabled must reduce to a
+//!     relaxed atomic load);
+//!   * end-to-end: the native mlp/ptq fused train step with obs on vs
+//!     off, reported as a relative overhead percentage.
+//!
+//! Self-contained: writes its own native artifacts into a temp dir.
+//!
+//! Run: `cargo bench --bench obs_overhead` (BENCH_BUDGET_MS to tune).
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::Trainer;
+use statquant::obs;
+use statquant::runtime::{native, MlpSpec, Registry, Runtime};
+use statquant::util::bench::Bench;
+
+const BUDGET_PCT: f64 = 5.0;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- micro primitives, obs on vs off -------------------------------
+    let m = obs::metrics();
+    let c = m.counter("bench_obs_counter_total", "overhead bench counter");
+    let g = m.gauge("bench_obs_gauge", "overhead bench gauge");
+    let h = m.histogram(
+        "bench_obs_hist_seconds",
+        "overhead bench histogram",
+        &obs::registry::TIME_BUCKETS,
+    );
+    for on in [true, false] {
+        obs::set_enabled(on);
+        let tag = if on { "on" } else { "off" };
+        b.run(&format!("micro/counter_inc obs_{tag}"), 1000.0, || {
+            for _ in 0..1000 {
+                c.inc();
+            }
+        });
+        b.run(&format!("micro/gauge_set obs_{tag}"), 1000.0, || {
+            for i in 0..1000 {
+                g.set(i as f64);
+            }
+        });
+        b.run(&format!("micro/hist_observe obs_{tag}"), 1000.0, || {
+            for i in 0..1000 {
+                h.observe(i as f64 * 1e-6);
+            }
+        });
+        b.run(&format!("micro/span obs_{tag}"), 1000.0, || {
+            for _ in 0..1000 {
+                let _sp = obs::span("bench/span");
+            }
+        });
+        obs::span::clear();
+    }
+
+    // --- end-to-end train step, obs on vs off ---------------------------
+    let dir = std::env::temp_dir().join(format!("sq_obs_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    native::write_artifacts(&dir, &MlpSpec::default()).expect("artifacts");
+    let reg = Registry::open(&dir).expect("registry");
+    let rt = Runtime::native();
+    let cfg = TrainConfig {
+        model: "mlp".into(),
+        variant: "ptq".into(),
+        bits: 5.0,
+        steps: 1,
+        artifacts_dir: dir.display().to_string(),
+        out_dir: dir.join("runs").display().to_string(),
+        ..TrainConfig::default()
+    };
+
+    let mut per_mode = [0.0f64; 2];
+    for (idx, on) in [true, false].into_iter().enumerate() {
+        obs::set_enabled(on);
+        let tag = if on { "on" } else { "off" };
+        let mut tr = Trainer::new(&rt, &reg, cfg.clone()).expect("trainer");
+        let elems = tr.train_exec.meta.input_shape.iter().product::<usize>() as f64;
+        let mut step = 0u64;
+        let r = b.run(&format!("train_step/mlp/ptq obs_{tag}"), elems, || {
+            tr.train_step_bench(step).expect("step");
+            step += 1;
+        });
+        per_mode[idx] = r.median_ns;
+        obs::span::clear();
+    }
+    let (on_ns, off_ns) = (per_mode[0], per_mode[1]);
+    let overhead_pct = 100.0 * (on_ns - off_ns) / off_ns.max(1.0);
+    println!(
+        "\nobs overhead on train step: {overhead_pct:+.2}% \
+         (on {on_ns:.0} ns, off {off_ns:.0} ns, budget {BUDGET_PCT}%)"
+    );
+    if overhead_pct > BUDGET_PCT {
+        println!("WARNING: overhead exceeds the {BUDGET_PCT}% budget");
+    }
+
+    // gauges are enable-gated: re-enable before exporting the results
+    obs::set_enabled(true);
+    b.finish("obs_overhead").expect("bench artifacts");
+    println!("wrote results/bench/obs_overhead.csv + BENCH_obs_overhead.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

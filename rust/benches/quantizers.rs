@@ -96,6 +96,6 @@ fn main() {
             std::hint::black_box(out);
         });
     }
-    b.write_csv("quantizers").expect("csv");
-    println!("\nwrote results/bench/quantizers.csv");
+    b.finish("quantizers").expect("bench artifacts");
+    println!("\nwrote results/bench/quantizers.csv + BENCH_quantizers.json");
 }

@@ -33,7 +33,8 @@ fn main() {
         }
     };
     let models = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "mlp,cnn,transformer".into());
-    let variants = std::env::var("BENCH_VARIANTS").unwrap_or_else(|_| "exact,qat,ptq,psq,bhq".into());
+    let variants =
+        std::env::var("BENCH_VARIANTS").unwrap_or_else(|_| "exact,qat,ptq,psq,bhq".into());
 
     let mut b = Bench::new();
     for model in models.split(',') {
@@ -83,6 +84,6 @@ fn main() {
             });
         }
     }
-    b.write_csv("train_step").expect("csv");
-    println!("\nwrote results/bench/train_step.csv");
+    b.finish("train_step").expect("bench artifacts");
+    println!("\nwrote results/bench/train_step.csv + BENCH_train_step.json");
 }

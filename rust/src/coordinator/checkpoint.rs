@@ -37,6 +37,7 @@ fn read_f32le(path: &Path) -> Result<Vec<f32>> {
 impl Checkpoint {
     /// Write `<dir>/ckpt_<step>.{params,momentum}.bin` + manifest.
     pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let _sp = crate::obs::span("ckpt/save");
         std::fs::create_dir_all(dir)?;
         let stem = dir.join(format!("ckpt_{:08}", self.step));
         write_f32le(&stem.with_extension("params.bin"), &self.params)?;
@@ -51,6 +52,7 @@ impl Checkpoint {
     }
 
     pub fn load(meta_path: &Path) -> Result<Self> {
+        let _sp = crate::obs::span("ckpt/load");
         let text = std::fs::read_to_string(meta_path)?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let step = j

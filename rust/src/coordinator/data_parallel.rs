@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use super::lr::Schedule;
 use crate::data::Dataset;
+use crate::obs;
 use crate::quant::{GradQuantizer, Mat};
 use crate::runtime::{Executor, HostTensor};
 use crate::util::rng::{Pcg32, SplitMix64};
@@ -60,10 +61,12 @@ impl DataParallel<'_> {
         model_bits: f32,
         rng: &mut Pcg32,
     ) -> Result<DpStep> {
+        let _sp = obs::span("dp/step");
         let p = params.len();
         let mut grads = Mat::zeros(self.workers, p);
         let mut loss = 0.0;
         for w in 0..self.workers {
+            let _wsp = obs::span("dp/worker_grad");
             let batch = dataset.batch(step * self.workers as u64 + w as u64);
             let seed = f32::from_bits(worker_seed(step, w));
             let inputs = [
@@ -81,6 +84,7 @@ impl DataParallel<'_> {
 
         // Quantized all-reduce: each worker's gradient is a sample row.
         let reduced: Vec<f32> = if self.allreduce_bits > 0.0 && self.workers > 1 {
+            let _qsp = obs::span("dp/allreduce_quant");
             let q = self.quantizer.apply(&grads, self.allreduce_bits, rng);
             mean_rows(&q)
         } else {
@@ -92,6 +96,12 @@ impl DataParallel<'_> {
             gnorm += f64::from(*g) * f64::from(*g);
             *vv = (self.momentum * f64::from(*vv) + f64::from(*g)) as f32;
             *pv -= (lr * f64::from(*vv)) as f32;
+        }
+        if obs::enabled() {
+            let m = obs::metrics();
+            m.counter("dp_steps_total", "data-parallel steps").inc();
+            m.gauge("dp_grad_norm_sq", "squared norm of the last reduced gradient")
+                .set(gnorm);
         }
         Ok(DpStep {
             loss,

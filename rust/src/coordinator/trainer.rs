@@ -17,6 +17,7 @@ use crate::data::markov::{Markov, MarkovConfig};
 use crate::data::synthimg::{SynthImg, SynthImgConfig};
 use crate::data::Dataset;
 use crate::metrics::{CsvWriter, JsonlWriter};
+use crate::obs;
 use crate::runtime::{Executor, HostTensor, Registry, Runtime, StepKind};
 use crate::util::json::{obj, Json};
 
@@ -29,10 +30,21 @@ pub struct TrainReport {
     pub final_eval_loss: f64,
     pub final_eval_acc: f64,
     pub diverged: bool,
+    /// The step at which the divergence guard tripped, when it did.
+    pub diverged_at_step: Option<u64>,
     pub wall_seconds: f64,
     pub steps_per_second: f64,
     pub curve: Vec<(u64, f64)>,
     pub params: Vec<f32>,
+}
+
+/// NaN/inf would serialize as invalid JSON through `Json::Num`.
+fn finite_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::from(v)
+    } else {
+        Json::Null
+    }
 }
 
 /// Build the dataset matching a model's ABI from the config.
@@ -102,7 +114,10 @@ impl Trainer {
     }
 
     fn step_once(&mut self, step: u64, lr: f64) -> Result<(f64, f64)> {
-        let batch = self.dataset.batch(step);
+        let batch = {
+            let _sp = obs::span("train/data");
+            self.dataset.batch(step)
+        };
         // seed folds the run seed with the step so every step draws fresh
         // SR noise but the whole run replays exactly.
         let seed = (self.cfg.seed.wrapping_mul(1_000_003) + step) % 16_777_213;
@@ -115,7 +130,10 @@ impl Trainer {
             HostTensor::F32(vec![lr as f32]),
             HostTensor::F32(vec![self.cfg.bits]),
         ];
-        let mut out = self.train_exec.run(&inputs)?;
+        let mut out = {
+            let _sp = obs::span("train/dispatch");
+            self.train_exec.run(&inputs)?
+        };
         // outputs: (params', momentum', loss, acc)
         let acc = out.pop().expect("acc").into_f32()?[0] as f64;
         let loss = out.pop().expect("loss").into_f32()?[0] as f64;
@@ -145,32 +163,74 @@ impl Trainer {
     }
 
     /// Run the configured number of steps, logging curves + checkpoints.
+    /// With obs enabled the run directory additionally receives
+    /// `metrics.prom` (Prometheus text), `metrics.jsonl` (registry
+    /// snapshots at eval points), and `trace.json` (Chrome trace).
     pub fn train(&mut self) -> Result<TrainReport> {
         let schedule = Schedule::from_name(&self.cfg.schedule)
             .context("unknown schedule")?;
         let warmup = (self.cfg.steps as f64 * self.cfg.warmup_frac) as u64;
         let mut jsonl = JsonlWriter::create(self.out_dir.join("log.jsonl"))?;
+        let mut metrics_jsonl = JsonlWriter::create(self.out_dir.join("metrics.jsonl"))?;
         let mut csv = CsvWriter::create(
             self.out_dir.join("curve.csv"),
             &["step", "lr", "train_loss", "train_acc"],
         )?;
+        let m = obs::metrics();
+        let steps_total = m.counter("train_steps_total", "training steps completed");
+        let diverged_total =
+            m.counter("train_diverged_total", "runs that hit the divergence guard");
+        let step_seconds = m.histogram(
+            "train_step_seconds",
+            "wall time of one fused train step",
+            &obs::registry::TIME_BUCKETS,
+        );
         let mut curve = Vec::new();
-        let mut diverged = false;
+        let mut diverged_at_step = None;
         let mut last_loss = f64::NAN;
+        // quantizer-telemetry baseline: report per-eval-window deltas so
+        // clip rates reflect this run, not process-lifetime totals.
+        let mut last_q = obs::quant::totals_for(&self.cfg.variant);
         let t0 = Instant::now();
         for step in 0..self.cfg.steps {
+            let _step_span = obs::span("train/step");
             let lr = schedule.lr(self.cfg.lr, step, self.cfg.steps, warmup);
+            let ts = Instant::now();
             let (loss, acc) = self.step_once(step, lr)?;
+            step_seconds.observe(ts.elapsed().as_secs_f64());
+            steps_total.inc();
             last_loss = loss;
             if !loss.is_finite() || loss > 1e4 {
-                diverged = true;
-                eprintln!("[train] {} diverged at step {step} (loss {loss})", self.cfg.run_name());
+                diverged_at_step = Some(step);
+                diverged_total.inc();
+                obs::event(
+                    "train_diverged",
+                    &[
+                        ("run", self.cfg.run_name()),
+                        ("step", step.to_string()),
+                        ("loss", format!("{loss}")),
+                    ],
+                );
+                jsonl.write(&obj([
+                    ("step", Json::from(step as usize)),
+                    ("event", Json::from("diverged")),
+                    ("diverged_at_step", Json::from(step as usize)),
+                    // loss may be NaN/inf here — keep the repr as a string
+                    ("train_loss_repr", Json::from(format!("{loss}"))),
+                ]))?;
                 break;
             }
             curve.push((step, loss));
-            csv.rowf(&[step as f64, lr, loss, acc])?;
+            {
+                let _sp = obs::span("train/metrics");
+                csv.rowf(&[step as f64, lr, loss, acc])?;
+            }
             if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
+                let _sp = obs::span("train/eval");
                 let (el, ea) = self.evaluate(self.cfg.eval_batches)?;
+                let q = obs::quant::totals_for(&self.cfg.variant);
+                let dq = q.since(&last_q);
+                last_q = q;
                 jsonl.write(&obj([
                     ("step", Json::from(step as usize)),
                     ("lr", Json::from(lr)),
@@ -178,15 +238,27 @@ impl Trainer {
                     ("train_acc", Json::from(acc)),
                     ("eval_loss", Json::from(el)),
                     ("eval_acc", Json::from(ea)),
+                    ("quant_clip_rate", Json::from(dq.clip_rate())),
+                    ("quant_zero_rate", Json::from(dq.zero_rate())),
+                    ("quant_grad_var", finite_or_null(q.var_last)),
+                    ("quant_grad_var_mean", finite_or_null(q.var_mean)),
                 ]))?;
+                if obs::enabled() {
+                    metrics_jsonl.write(&m.snapshot_json())?;
+                }
             }
         }
         let wall = t0.elapsed().as_secs_f64();
-        let (el, ea) = if diverged {
+        let (el, ea) = if diverged_at_step.is_some() {
             (f64::NAN, 0.0)
         } else {
             self.evaluate(self.cfg.eval_batches)?
         };
+        if obs::enabled() {
+            std::fs::write(self.out_dir.join("metrics.prom"), m.render_prometheus())?;
+            metrics_jsonl.write(&m.snapshot_json())?;
+            obs::span::write_chrome_trace(&self.out_dir.join("trace.json"))?;
+        }
         let done = curve.len() as u64;
         Ok(TrainReport {
             run_name: self.cfg.run_name(),
@@ -194,7 +266,8 @@ impl Trainer {
             final_train_loss: last_loss,
             final_eval_loss: el,
             final_eval_acc: ea,
-            diverged,
+            diverged: diverged_at_step.is_some(),
+            diverged_at_step,
             wall_seconds: wall,
             steps_per_second: done as f64 / wall.max(1e-9),
             curve,

@@ -1,4 +1,4 @@
-//! Ablations called out in DESIGN.md §6.
+//! Ablations called out in DESIGN.md §7.
 
 use anyhow::Result;
 

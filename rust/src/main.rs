@@ -7,6 +7,7 @@
 //!   exp <name> [flags]                       regenerate a paper table/figure
 //!   gen-artifacts [--artifacts DIR]          write the native MLP artifacts
 //!   list                                     show available artifacts
+//!   trace-report <run-dir>                   render obs artifacts as markdown
 //!
 //! Python never runs here: either `make artifacts` (AOT-lowered HLO, run
 //! under `--features pjrt`) or `statquant gen-artifacts` (native backend)
@@ -33,14 +34,16 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: statquant <train|eval|probe|exp|list> [options]\n\
+    "usage: statquant <train|eval|probe|exp|list|trace-report> [options]\n\
      \n\
      train [config.toml] [--artifacts DIR] [--set key=value ...]\n\
      eval  --model M [--artifacts DIR] [--ckpt ckpt_xxx.json] [--batches N]\n\
      probe --model M --variant Q [--bits 4,5,6] [--seeds K] [--warm N]\n\
      exp   <fig3a|fig3bc|fig4|fig5|table1|table2|thm1|ablate-*> [flags]\n\
      gen-artifacts [--artifacts DIR]\n\
-     list  [--artifacts DIR]\n"
+     list  [--artifacts DIR]\n\
+     trace-report <run-dir>   per-phase time breakdown + quantizer health\n\
+     \x20                      from trace.json / metrics.prom / log.jsonl\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -74,6 +77,19 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args, &artifacts),
         "eval" => cmd_eval(&args, &artifacts),
         "probe" => cmd_probe(&args, &artifacts),
+        "trace-report" => {
+            let dir = args
+                .positional
+                .first()
+                .context("trace-report requires a run directory")?
+                .clone();
+            args.check_unknown()?;
+            print!(
+                "{}",
+                statquant::obs::report::render_run_report(Path::new(&dir))?
+            );
+            Ok(())
+        }
         "exp" => {
             let name = args
                 .positional
@@ -126,7 +142,10 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         report.final_train_loss,
         report.final_eval_loss,
         report.final_eval_acc,
-        if report.diverged { " (DIVERGED)" } else { "" },
+        match report.diverged_at_step {
+            Some(s) => format!(" (DIVERGED at step {s})"),
+            None => String::new(),
+        },
         meta.display()
     );
     Ok(())

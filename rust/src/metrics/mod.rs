@@ -3,7 +3,6 @@
 //! Every experiment binary writes through these so tables/figures can be
 //! regenerated and diffed as plain text.
 
-use std::fmt::Write as _;
 use std::fs::{self, File};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
@@ -30,11 +29,7 @@ impl JsonlWriter {
     }
 
     pub fn write(&mut self, j: &Json) -> Result<()> {
-        let mut line = String::new();
-        // compact form: reuse pretty writer then strip newlines is wasteful;
-        // Json::write with pretty=false via to_string_pretty would add
-        // whitespace, so serialize compact by hand here.
-        write_compact(j, &mut line);
+        let mut line = j.to_string_compact();
         line.push('\n');
         self.file.write_all(line.as_bytes())?;
         Ok(())
@@ -42,44 +37,6 @@ impl JsonlWriter {
 
     pub fn path(&self) -> &Path {
         &self.path
-    }
-}
-
-fn write_compact(j: &Json, out: &mut String) {
-    match j {
-        Json::Null => out.push_str("null"),
-        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-        Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 9e15 {
-                let _ = write!(out, "{}", *n as i64);
-            } else {
-                let _ = write!(out, "{n}");
-            }
-        }
-        Json::Str(s) => {
-            let _ = write!(out, "{:?}", s); // rust debug-escape ~ json for ascii
-        }
-        Json::Arr(v) => {
-            out.push('[');
-            for (i, x) in v.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                write_compact(x, out);
-            }
-            out.push(']');
-        }
-        Json::Obj(m) => {
-            out.push('{');
-            for (i, (k, x)) in m.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                let _ = write!(out, "{k:?}:");
-                write_compact(x, out);
-            }
-            out.push('}');
-        }
     }
 }
 
@@ -194,6 +151,22 @@ mod tests {
         assert_eq!(lines.len(), 2);
         let j = Json::parse(lines[1]).unwrap();
         assert_eq!(j.get("loss").unwrap().as_f64(), Some(2.25));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Regression: the old hand-rolled compact writer used `{:?}` for
+    /// strings, emitting Rust debug escapes like `\u{1f600}` that no
+    /// JSON parser accepts. Non-ASCII must round-trip.
+    #[test]
+    fn jsonl_non_ascii_strings_stay_valid_json() {
+        let dir = std::env::temp_dir().join(format!("sq_jsonl_u_{}", std::process::id()));
+        let path = dir.join("log.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.write(&obj([("run", Json::from("smoke 😀 é\u{1}"))])).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).expect("line must be valid JSON");
+        assert_eq!(j.get("run").unwrap().as_str(), Some("smoke 😀 é\u{1}"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,73 @@
+//! Observability: metrics registry, hierarchical spans, quantizer
+//! telemetry, and the `trace-report` renderer.
+//!
+//! The whole layer hangs off one global [`enabled`] flag (default on).
+//! When disabled, every instrumentation site reduces to a relaxed
+//! atomic load — no clock reads, no allocation, no locks — which is
+//! what lets it stay on by default in every experiment binary (see
+//! `benches/obs_overhead.rs` for the measured budget).
+//!
+//! Naming conventions (see DESIGN.md "Observability"):
+//! - metrics: `snake_case`, counters end in `_total`, durations in
+//!   `_seconds`; labels via [`registry::labeled`]
+//!   (`executor_dispatch_total{backend="native",step="train"}`).
+//! - spans: `area/phase` (`train/step`, `exec/train`, `dp/allreduce_quant`).
+
+pub mod quant;
+pub mod registry;
+pub mod report;
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+pub use registry::{Counter, Gauge, HistogramMetric, MetricsRegistry};
+pub use span::{instant, span, span_cat, SpanGuard};
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Whether instrumentation is live. Checked on every hot-path site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Toggle the whole observability layer (process-global).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The process-global metrics registry every instrumentation site
+/// registers into; exported per-run as `metrics.prom` / `metrics.jsonl`.
+pub fn metrics() -> &'static MetricsRegistry {
+    static REG: OnceLock<MetricsRegistry> = OnceLock::new();
+    REG.get_or_init(MetricsRegistry::new)
+}
+
+/// Structured event: stderr line for the operator plus an instant event
+/// in the trace stream (replaces ad-hoc `eprintln!` in the hot paths).
+pub fn event(name: &str, fields: &[(&str, String)]) {
+    if !enabled() {
+        return;
+    }
+    let mut line = format!("[obs] {name}");
+    for (k, v) in fields {
+        line.push_str(&format!(" {k}={v}"));
+    }
+    eprintln!("{line}");
+    span::instant(name, fields);
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Serialize tests that toggle the global enabled flag or assert on
+    /// global sinks; a panicked holder must not wedge the rest.
+    pub fn serial() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+}

@@ -1,0 +1,268 @@
+//! Quantizer telemetry: clip / zero-code / poisoned-row counters plus
+//! sampled exact SR-variance gauges — the Theorem-1 quantization-noise
+//! quantities, observed live instead of via an offline probe.
+//!
+//! Each native quantizer (`quant::{ptq,psq,bhq,sr}`) reports one
+//! [`crate::quant::QuantStats`] per call through its per-quantizer
+//! [`QuantTelemetry`]; counts land in labeled registry counters
+//! (`quant_*_total{quantizer="ptq"}`), and every
+//! [`SAMPLE_EVERY`]-th call additionally computes the exact SR variance
+//! sum p(1-p)/scale^2 (Proposition 4) which feeds a last-value gauge and
+//! a Welford running mean ([`crate::stats::Welford`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::quant::QuantStats;
+use crate::stats::Welford;
+
+use super::registry::{labeled, Counter, Gauge};
+
+/// Every `SAMPLE_EVERY`-th quantize call pays for the exact-variance
+/// pass; the counters are exact on every call.
+pub const SAMPLE_EVERY: u64 = 16;
+
+/// Per-quantizer telemetry sink.
+pub struct QuantTelemetry {
+    pub name: &'static str,
+    tensors: Counter,
+    values: Counter,
+    clipped: Counter,
+    zero_codes: Counter,
+    poisoned_rows: Counter,
+    calls: AtomicU64,
+    var_last: Gauge,
+    var_mean: Gauge,
+    welford: Mutex<Welford>,
+}
+
+impl QuantTelemetry {
+    fn new(name: &'static str) -> Self {
+        let m = crate::obs::metrics();
+        let l = |base: &str| labeled(base, &[("quantizer", name)]);
+        Self {
+            name,
+            tensors: m.counter(&l("quant_tensors_total"), "tensors quantized"),
+            values: m.counter(&l("quant_values_total"), "scalar values quantized"),
+            clipped: m.counter(&l("quant_clipped_total"), "codes clipped into the bin range"),
+            zero_codes: m.counter(&l("quant_zero_codes_total"), "codes that landed on zero"),
+            poisoned_rows: m.counter(&l("quant_poisoned_rows_total"), "NaN-poisoned rows emitted"),
+            calls: AtomicU64::new(0),
+            var_last: m.gauge(
+                &l("quant_sr_variance"),
+                "exact SR variance of the last sampled tensor (Thm 1 noise term)",
+            ),
+            var_mean: m.gauge(
+                &l("quant_sr_variance_mean"),
+                "running mean of sampled exact SR variances",
+            ),
+            welford: Mutex::new(Welford::new()),
+        }
+    }
+
+    /// Whether this call should compute the exact-variance sample. Also
+    /// advances the call counter, so call it exactly once per quantize.
+    #[inline]
+    pub fn should_sample(&self) -> bool {
+        crate::obs::enabled() && self.calls.fetch_add(1, Ordering::Relaxed) % SAMPLE_EVERY == 0
+    }
+
+    /// Fold one quantize call's stats into the counters and gauges.
+    pub fn record(&self, st: &QuantStats) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        self.tensors.inc();
+        self.values.add(st.values);
+        self.clipped.add(st.clipped);
+        self.zero_codes.add(st.zero_codes);
+        self.poisoned_rows.add(st.poisoned_rows);
+        if let Some(v) = st.sr_variance {
+            if v.is_finite() {
+                self.var_last.set(v);
+                let mut w = self.welford.lock().unwrap_or_else(|e| e.into_inner());
+                w.push(v);
+                self.var_mean.set(w.mean());
+            }
+        }
+    }
+
+    pub fn totals(&self) -> QuantTotals {
+        QuantTotals {
+            tensors: self.tensors.get(),
+            values: self.values.get(),
+            clipped: self.clipped.get(),
+            zero_codes: self.zero_codes.get(),
+            poisoned_rows: self.poisoned_rows.get(),
+            var_last: self.var_last.get(),
+            var_mean: self.var_mean.get(),
+        }
+    }
+}
+
+macro_rules! telemetry_static {
+    ($fn_name:ident, $name:literal) => {
+        pub fn $fn_name() -> &'static QuantTelemetry {
+            static CELL: OnceLock<QuantTelemetry> = OnceLock::new();
+            CELL.get_or_init(|| QuantTelemetry::new($name))
+        }
+    };
+}
+
+telemetry_static!(ptq, "ptq");
+telemetry_static!(psq, "psq");
+telemetry_static!(bhq, "bhq");
+telemetry_static!(sr, "sr");
+
+/// Telemetry sink for a quantizer name, if one is instrumented.
+pub fn by_name(name: &str) -> Option<&'static QuantTelemetry> {
+    match name {
+        "ptq" => Some(ptq()),
+        "psq" => Some(psq()),
+        "bhq" => Some(bhq()),
+        "sr" => Some(sr()),
+        _ => None,
+    }
+}
+
+/// Point-in-time totals for one quantizer (or summed over all).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantTotals {
+    pub tensors: u64,
+    pub values: u64,
+    pub clipped: u64,
+    pub zero_codes: u64,
+    pub poisoned_rows: u64,
+    pub var_last: f64,
+    pub var_mean: f64,
+}
+
+impl QuantTotals {
+    pub fn clip_rate(&self) -> f64 {
+        if self.values == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.values as f64
+        }
+    }
+
+    pub fn zero_rate(&self) -> f64 {
+        if self.values == 0 {
+            0.0
+        } else {
+            self.zero_codes as f64 / self.values as f64
+        }
+    }
+
+    /// Count deltas since `earlier`; gauges keep `self`'s (latest) values.
+    pub fn since(&self, earlier: &QuantTotals) -> QuantTotals {
+        QuantTotals {
+            tensors: self.tensors.saturating_sub(earlier.tensors),
+            values: self.values.saturating_sub(earlier.values),
+            clipped: self.clipped.saturating_sub(earlier.clipped),
+            zero_codes: self.zero_codes.saturating_sub(earlier.zero_codes),
+            poisoned_rows: self.poisoned_rows.saturating_sub(earlier.poisoned_rows),
+            var_last: self.var_last,
+            var_mean: self.var_mean,
+        }
+    }
+}
+
+/// Totals for a run variant: the named quantizer's own telemetry when it
+/// is instrumented, otherwise (qat/exact/fp8/bfp) the sum over all sinks
+/// — whatever quantization the variant exercised indirectly.
+pub fn totals_for(variant: &str) -> QuantTotals {
+    if let Some(t) = by_name(variant) {
+        return t.totals();
+    }
+    let mut acc = QuantTotals::default();
+    for t in [ptq(), psq(), bhq(), sr()] {
+        let x = t.totals();
+        acc.tensors += x.tensors;
+        acc.values += x.values;
+        acc.clipped += x.clipped;
+        acc.zero_codes += x.zero_codes;
+        acc.poisoned_rows += x.poisoned_rows;
+        if x.var_last != 0.0 {
+            acc.var_last = x.var_last;
+            acc.var_mean = x.var_mean;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests use uniquely-named instances: the ptq/psq/bhq/sr singletons
+    // receive concurrent traffic from quantizer tests in other threads,
+    // so exact-count assertions against them would be racy.
+
+    #[test]
+    fn record_accumulates_and_rates_compute() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let tel = QuantTelemetry::new("test_q_record");
+        let before = tel.totals();
+        tel.record(&QuantStats {
+            values: 100,
+            clipped: 5,
+            zero_codes: 20,
+            poisoned_rows: 1,
+            sr_variance: Some(0.25),
+        });
+        let delta = tel.totals().since(&before);
+        assert_eq!(delta.tensors, 1);
+        assert_eq!(delta.values, 100);
+        assert_eq!(delta.clipped, 5);
+        assert_eq!(delta.zero_codes, 20);
+        assert_eq!(delta.poisoned_rows, 1);
+        assert_eq!(delta.clip_rate(), 0.05);
+        assert_eq!(delta.zero_rate(), 0.2);
+        assert_eq!(delta.var_last, 0.25);
+    }
+
+    #[test]
+    fn sampling_cadence_is_one_in_sample_every() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let tel = QuantTelemetry::new("test_q_cadence");
+        assert!(tel.should_sample(), "first call must sample");
+        let sampled = (1..SAMPLE_EVERY).filter(|_| tel.should_sample()).count();
+        assert_eq!(sampled, 0, "rest of the window must not sample");
+        assert!(tel.should_sample(), "next window samples again");
+    }
+
+    #[test]
+    fn disabled_never_samples_or_records() {
+        let _g = crate::obs::testutil::serial();
+        let tel = QuantTelemetry::new("test_q_disabled");
+        crate::obs::set_enabled(false);
+        let before = tel.totals();
+        assert!(!tel.should_sample());
+        tel.record(&QuantStats {
+            values: 10,
+            ..QuantStats::default()
+        });
+        crate::obs::set_enabled(true);
+        assert_eq!(tel.totals(), before);
+    }
+
+    #[test]
+    fn totals_for_falls_back_to_sum() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let before = totals_for("qat");
+        sr().record(&QuantStats {
+            values: 7,
+            clipped: 2,
+            ..QuantStats::default()
+        });
+        let after = totals_for("qat");
+        assert!(after.values >= before.values + 7);
+        assert!(after.clipped >= before.clipped + 2);
+        assert!(by_name("ptq").is_some());
+        assert!(by_name("qat").is_none());
+    }
+}

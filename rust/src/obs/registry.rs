@@ -1,0 +1,512 @@
+//! Metrics registry: atomic counters, gauges, and fixed-bin histograms
+//! with Prometheus-style text exposition and a JSON snapshot exporter.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`HistogramMetric`]) are `Arc`-backed
+//! cells resolved once at registration time; the hot path is one relaxed
+//! atomic load (the global enable flag, [`crate::obs::enabled`]) plus one
+//! relaxed RMW. With obs disabled every record call reduces to the single
+//! flag load — the "compiles to atomic loads only" budget the overhead
+//! bench (`benches/obs_overhead.rs`) verifies.
+//!
+//! Naming convention: `snake_case` bases with Prometheus suffixes
+//! (`_total` for counters, `_seconds`/`_ns` for timings) and inline
+//! labels built via [`labeled`], e.g.
+//! `quant_clipped_total{quantizer="ptq"}`. The full labeled string is the
+//! registry key, so two label sets of one base are two independent cells
+//! sharing one `# HELP`/`# TYPE` block in the exposition.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::{obj, Json};
+
+/// Exponential wall-time buckets (seconds) shared by the latency
+/// histograms: 1 µs .. 10 s.
+pub const TIME_BUCKETS: [f64; 10] = [1e-6, 1e-5, 1e-4, 5e-4, 1e-3, 5e-3, 1e-2, 1e-1, 1.0, 10.0];
+
+/// Build a full metric name with Prometheus labels:
+/// `labeled("quant_clipped_total", &[("quantizer", "ptq")])` yields
+/// `quant_clipped_total{quantizer="ptq"}`.
+pub fn labeled(base: &str, labels: &[(&str, &str)]) -> String {
+    let mut s = String::with_capacity(base.len() + 24 * labels.len());
+    s.push_str(base);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\""));
+    }
+    s.push('}');
+    s
+}
+
+/// Name without the label block (`a_total{x="y"}` -> `a_total`).
+fn base_of(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// Monotonic counter. `Clone` shares the underlying cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if crate::obs::enabled() {
+            self.cell.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.cell.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-value gauge (f64 bits in an atomic).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if crate::obs::enabled() {
+            self.cell.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+
+    fn reset(&self) {
+        self.cell.store(0, Ordering::Relaxed);
+    }
+}
+
+#[derive(Debug)]
+struct HistCore {
+    /// Sorted, deduped upper bounds; counts has one extra overflow slot.
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bin histogram with Prometheus cumulative-bucket exposition.
+#[derive(Clone, Debug)]
+pub struct HistogramMetric {
+    core: Arc<HistCore>,
+}
+
+impl HistogramMetric {
+    fn new(bounds: &[f64]) -> Self {
+        let mut b: Vec<f64> = bounds.iter().copied().filter(|v| v.is_finite()).collect();
+        b.sort_by(f64::total_cmp);
+        b.dedup();
+        let counts = (0..=b.len()).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            core: Arc::new(HistCore {
+                bounds: b,
+                counts,
+                total: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        let c = &self.core;
+        // first bound >= v, i.e. the `le` bucket this value falls in
+        let idx = c.bounds.partition_point(|&b| b < v);
+        c.counts[idx].fetch_add(1, Ordering::Relaxed);
+        c.total.fetch_add(1, Ordering::Relaxed);
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match c
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.core.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(upper_bound, cumulative_count)` pairs, ending with `(+inf, total)`.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let c = &self.core;
+        let mut out = Vec::with_capacity(c.bounds.len() + 1);
+        let mut acc = 0u64;
+        for (i, &b) in c.bounds.iter().enumerate() {
+            acc += c.counts[i].load(Ordering::Relaxed);
+            out.push((b, acc));
+        }
+        acc += c.counts[c.bounds.len()].load(Ordering::Relaxed);
+        out.push((f64::INFINITY, acc));
+        out
+    }
+
+    fn reset(&self) {
+        for c in &self.core.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.core.total.store(0, Ordering::Relaxed);
+        self.core.sum_bits.store(0, Ordering::Relaxed);
+    }
+}
+
+enum Entry {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(HistogramMetric),
+}
+
+struct Slot {
+    help: String,
+    entry: Entry,
+}
+
+/// The registry: labeled name -> metric cell. One global instance lives
+/// behind [`crate::obs::metrics`]; tests construct their own.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Slot>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, Slot>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Get-or-register a counter. On a name already registered with a
+    /// different type, returns a detached cell (recorded values go
+    /// nowhere) rather than panicking mid-training.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        let mut m = self.lock();
+        let slot = m.entry(name.to_string()).or_insert_with(|| Slot {
+            help: help.to_string(),
+            entry: Entry::Counter(Counter::default()),
+        });
+        match &slot.entry {
+            Entry::Counter(c) => c.clone(),
+            _ => Counter::default(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        let mut m = self.lock();
+        let slot = m.entry(name.to_string()).or_insert_with(|| Slot {
+            help: help.to_string(),
+            entry: Entry::Gauge(Gauge::default()),
+        });
+        match &slot.entry {
+            Entry::Gauge(g) => g.clone(),
+            _ => Gauge::default(),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> HistogramMetric {
+        let mut m = self.lock();
+        let slot = m.entry(name.to_string()).or_insert_with(|| Slot {
+            help: help.to_string(),
+            entry: Entry::Histogram(HistogramMetric::new(bounds)),
+        });
+        match &slot.entry {
+            Entry::Histogram(h) => h.clone(),
+            _ => HistogramMetric::new(bounds),
+        }
+    }
+
+    /// Zero every registered cell (handles stay valid). Test isolation.
+    pub fn reset(&self) {
+        for slot in self.lock().values() {
+            match &slot.entry {
+                Entry::Counter(c) => c.reset(),
+                Entry::Gauge(g) => g.reset(),
+                Entry::Histogram(h) => h.reset(),
+            }
+        }
+    }
+
+    /// Prometheus text exposition format: `# HELP`/`# TYPE` per base
+    /// name, histogram `_bucket{le=...}`/`_sum`/`_count` expansion.
+    pub fn render_prometheus(&self) -> String {
+        let m = self.lock();
+        let mut out = String::new();
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        for (name, slot) in m.iter() {
+            let base = base_of(name);
+            if seen.insert(base) {
+                let kind = match slot.entry {
+                    Entry::Counter(_) => "counter",
+                    Entry::Gauge(_) => "gauge",
+                    Entry::Histogram(_) => "histogram",
+                };
+                let _ = writeln!(out, "# HELP {base} {}", slot.help);
+                let _ = writeln!(out, "# TYPE {base} {kind}");
+            }
+            match &slot.entry {
+                Entry::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Entry::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Entry::Histogram(h) => {
+                    let labels = &name[base.len()..];
+                    let inner = labels.trim_start_matches('{').trim_end_matches('}');
+                    for (le, cum) in h.cumulative() {
+                        let le_s = if le.is_infinite() {
+                            "+Inf".to_string()
+                        } else {
+                            format!("{le}")
+                        };
+                        if inner.is_empty() {
+                            let _ = writeln!(out, "{base}_bucket{{le=\"{le_s}\"}} {cum}");
+                        } else {
+                            let _ = writeln!(out, "{base}_bucket{{{inner},le=\"{le_s}\"}} {cum}");
+                        }
+                    }
+                    let _ = writeln!(out, "{base}_sum{labels} {}", h.sum());
+                    let _ = writeln!(out, "{base}_count{labels} {}", h.count());
+                }
+            }
+        }
+        out
+    }
+
+    /// One snapshot of every metric as a JSON object — the payload of
+    /// the `metrics.jsonl` exporter and the `BENCH_*.json` trajectories.
+    pub fn snapshot_json(&self) -> Json {
+        let m = self.lock();
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        for (name, slot) in m.iter() {
+            match &slot.entry {
+                Entry::Counter(c) => {
+                    counters.insert(name.clone(), Json::Num(c.get() as f64));
+                }
+                Entry::Gauge(g) => {
+                    gauges.insert(name.clone(), json_num(g.get()));
+                }
+                Entry::Histogram(h) => {
+                    let buckets: Vec<Json> = h
+                        .cumulative()
+                        .into_iter()
+                        .map(|(le, n)| {
+                            let le_j = if le.is_infinite() {
+                                Json::Str("+Inf".to_string())
+                            } else {
+                                Json::Num(le)
+                            };
+                            let fields = [
+                                ("le".to_string(), le_j),
+                                ("count".to_string(), Json::from(n as f64)),
+                            ];
+                            Json::Obj(fields.into_iter().collect())
+                        })
+                        .collect();
+                    hists.insert(
+                        name.clone(),
+                        Json::Obj(
+                            [
+                                ("count".to_string(), Json::from(h.count() as f64)),
+                                ("sum".to_string(), json_num(h.sum())),
+                                ("buckets".to_string(), Json::Arr(buckets)),
+                            ]
+                            .into_iter()
+                            .collect(),
+                        ),
+                    );
+                }
+            }
+        }
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        obj([
+            ("ts_unix_ms", Json::Num(ts)),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+}
+
+/// Non-finite f64 (NaN gauge, inf sum) would serialize as invalid JSON;
+/// encode it as its display string instead.
+fn json_num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("{v}"))
+    }
+}
+
+/// Parse a Prometheus text exposition back into `name -> value` samples
+/// (comments and blank lines skipped). The value is everything after the
+/// *last* space, so label values containing spaces survive.
+pub fn parse_prometheus(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, val)) = line.rsplit_once(' ') {
+            if let Ok(v) = val.parse::<f64>() {
+                out.insert(name.trim().to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labeled_escapes_and_formats() {
+        assert_eq!(
+            labeled("x_total", &[("a", "b"), ("c", "d\"e")]),
+            "x_total{a=\"b\",c=\"d\\\"e\"}"
+        );
+    }
+
+    #[test]
+    fn exposition_roundtrips_through_line_parser() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let r = MetricsRegistry::new();
+        let c = r.counter("steps_total", "steps done");
+        let cl = r.counter(&labeled("clip_total", &[("quantizer", "ptq")]), "clips");
+        let g = r.gauge("loss", "last loss");
+        let h = r.histogram("lat_seconds", "latency", &[0.001, 0.01, 0.1]);
+        c.add(7);
+        cl.add(3);
+        g.set(2.5);
+        h.observe(0.0005);
+        h.observe(0.05);
+        h.observe(99.0);
+
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE steps_total counter"));
+        assert!(text.contains("# TYPE lat_seconds histogram"));
+        let map = parse_prometheus(&text);
+        assert_eq!(map["steps_total"], 7.0);
+        assert_eq!(map["clip_total{quantizer=\"ptq\"}"], 3.0);
+        assert_eq!(map["loss"], 2.5);
+        // cumulative buckets: 0.0005 <= 0.001; 0.05 <= 0.1; 99 -> +Inf
+        assert_eq!(map["lat_seconds_bucket{le=\"0.001\"}"], 1.0);
+        assert_eq!(map["lat_seconds_bucket{le=\"0.01\"}"], 1.0);
+        assert_eq!(map["lat_seconds_bucket{le=\"0.1\"}"], 2.0);
+        assert_eq!(map["lat_seconds_bucket{le=\"+Inf\"}"], 3.0);
+        assert_eq!(map["lat_seconds_count"], 3.0);
+        assert!((map["lat_seconds_sum"] - 99.0505).abs() < 1e-9);
+    }
+
+    #[test]
+    fn labeled_histogram_buckets_carry_labels() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let r = MetricsRegistry::new();
+        let h = r.histogram(
+            &labeled("disp_seconds", &[("backend", "native")]),
+            "dispatch",
+            &TIME_BUCKETS,
+        );
+        h.observe(2e-6);
+        let map = parse_prometheus(&r.render_prometheus());
+        assert_eq!(map["disp_seconds_bucket{backend=\"native\",le=\"0.00001\"}"], 1.0);
+        assert_eq!(map["disp_seconds_count{backend=\"native\"}"], 1.0);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let _g = crate::obs::testutil::serial();
+        let r = MetricsRegistry::new();
+        let c = r.counter("c_total", "c");
+        let g = r.gauge("g", "g");
+        let h = r.histogram("h_seconds", "h", &TIME_BUCKETS);
+        crate::obs::set_enabled(false);
+        c.inc();
+        g.set(5.0);
+        h.observe(0.5);
+        crate::obs::set_enabled(true);
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+        assert_eq!(h.count(), 0);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn handles_share_cells_and_reset_zeroes() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let r = MetricsRegistry::new();
+        let a = r.counter("shared_total", "x");
+        let b = r.counter("shared_total", "x");
+        a.add(2);
+        b.add(3);
+        assert_eq!(a.get(), 5);
+        r.reset();
+        assert_eq!(b.get(), 0);
+    }
+
+    #[test]
+    fn snapshot_json_is_parseable_even_with_nan_gauge() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let r = MetricsRegistry::new();
+        r.counter("a_total", "a").add(4);
+        r.gauge("bad", "nan gauge").set(f64::NAN);
+        r.histogram("h_seconds", "h", &[0.1]).observe(0.05);
+        let snap = r.snapshot_json();
+        let text = snap.to_string_pretty();
+        let back = Json::parse(&text).expect("snapshot must be valid JSON");
+        assert_eq!(back.path("counters.a_total").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(
+            back.path("histograms.h_seconds.count").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(back.path("gauges.bad").and_then(Json::as_str), Some("NaN"));
+    }
+}

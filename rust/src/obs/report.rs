@@ -1,0 +1,328 @@
+//! `statquant trace-report <run-dir>`: render per-phase time breakdowns
+//! and quantizer health from a run directory's obs artifacts
+//! (`trace.json`, `metrics.prom`, `log.jsonl`).
+//!
+//! Also the CI smoke gate: [`render_run_report`] fails hard when the
+//! artifacts are missing, unparseable, or the trace event stream is
+//! malformed (X events without `dur`, unbalanced B/E pairs).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::{fmt_sig, MarkdownTable};
+use crate::util::json::Json;
+
+use super::registry::parse_prometheus;
+
+/// Aggregated timing for one span name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseStat {
+    pub name: String,
+    pub count: u64,
+    pub total_us: f64,
+    pub max_us: f64,
+}
+
+impl PhaseStat {
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_us / self.count as f64
+        }
+    }
+}
+
+/// Validate a Chrome trace document and aggregate complete (`"X"`)
+/// events by name. Our exporter only emits X and i events, but foreign
+/// traces are guarded too: an X event without `dur` or an unbalanced
+/// B/E stream is an error, not a silent skip. Returns the per-phase
+/// stats sorted by total time (desc) and the traced wall-clock span in
+/// microseconds.
+pub fn phase_breakdown(trace: &Json) -> Result<(Vec<PhaseStat>, f64)> {
+    let events = trace
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("trace.json: missing traceEvents array")?;
+    let mut agg: BTreeMap<String, PhaseStat> = BTreeMap::new();
+    let mut begins: BTreeMap<String, i64> = BTreeMap::new();
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .with_context(|| format!("trace event {i}: missing ph"))?;
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+        let ts = e
+            .get("ts")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("trace event {i}: missing ts"))?;
+        t_min = t_min.min(ts);
+        t_max = t_max.max(ts);
+        match ph {
+            "X" => {
+                let dur = e
+                    .get("dur")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("trace event {i} ({name}): X event without dur"))?;
+                t_max = t_max.max(ts + dur);
+                let s = agg.entry(name.clone()).or_insert_with(|| PhaseStat {
+                    name,
+                    count: 0,
+                    total_us: 0.0,
+                    max_us: 0.0,
+                });
+                s.count += 1;
+                s.total_us += dur;
+                s.max_us = s.max_us.max(dur);
+            }
+            "B" => *begins.entry(name).or_insert(0) += 1,
+            "E" => *begins.entry(name).or_insert(0) -= 1,
+            _ => {} // instant/metadata events only bound the window
+        }
+    }
+    if let Some((name, n)) = begins.iter().find(|(_, &n)| n != 0) {
+        bail!("trace.json: unbalanced B/E events for {name:?} (excess {n})");
+    }
+    let mut stats: Vec<PhaseStat> = agg.into_values().collect();
+    stats.sort_by(|a, b| b.total_us.total_cmp(&a.total_us));
+    let wall = if t_max > t_min { t_max - t_min } else { 0.0 };
+    Ok((stats, wall))
+}
+
+/// Per-phase markdown table. `wall_us` normalizes the `% wall` column.
+pub fn render_phase_table(stats: &[PhaseStat], wall_us: f64) -> String {
+    let mut t = MarkdownTable::new(&["Phase", "Count", "Total ms", "Mean µs", "Max µs", "% wall"]);
+    for s in stats {
+        let share = if wall_us > 0.0 {
+            100.0 * s.total_us / wall_us
+        } else {
+            0.0
+        };
+        t.row(vec![
+            s.name.clone(),
+            format!("{}", s.count),
+            format!("{:.3}", s.total_us / 1e3),
+            format!("{:.1}", s.mean_us()),
+            format!("{:.1}", s.max_us),
+            format!("{share:.1}"),
+        ]);
+    }
+    t.render()
+}
+
+fn metric(map: &BTreeMap<String, f64>, base: &str, q: &str) -> f64 {
+    map.get(&format!("{base}{{quantizer=\"{q}\"}}"))
+        .copied()
+        .unwrap_or(0.0)
+}
+
+/// Quantizer-health markdown table from parsed Prometheus samples.
+pub fn render_quantizer_health(map: &BTreeMap<String, f64>) -> String {
+    let mut names: Vec<String> = Vec::new();
+    for k in map.keys() {
+        if let Some(rest) = k.strip_prefix("quant_values_total{quantizer=\"") {
+            if let Some(q) = rest.strip_suffix("\"}") {
+                names.push(q.to_string());
+            }
+        }
+    }
+    if names.is_empty() {
+        return "(no quantizer telemetry in metrics.prom)\n".to_string();
+    }
+    let mut t = MarkdownTable::new(&[
+        "Quantizer",
+        "Tensors",
+        "Values",
+        "Clipped",
+        "Clip %",
+        "Zero %",
+        "Poisoned",
+        "SR var (last)",
+        "SR var (mean)",
+    ]);
+    for q in &names {
+        let values = metric(map, "quant_values_total", q);
+        let clipped = metric(map, "quant_clipped_total", q);
+        let zeros = metric(map, "quant_zero_codes_total", q);
+        let pct = |x: f64| if values > 0.0 { 100.0 * x / values } else { 0.0 };
+        t.row(vec![
+            q.clone(),
+            format!("{}", metric(map, "quant_tensors_total", q)),
+            format!("{values}"),
+            format!("{clipped}"),
+            format!("{:.3}", pct(clipped)),
+            format!("{:.3}", pct(zeros)),
+            format!("{}", metric(map, "quant_poisoned_rows_total", q)),
+            fmt_sig(metric(map, "quant_sr_variance", q), 4),
+            fmt_sig(metric(map, "quant_sr_variance_mean", q), 4),
+        ]);
+    }
+    t.render()
+}
+
+/// Render the full report for one run directory. Errors if `trace.json`
+/// or `metrics.prom` is missing, unparseable, or empty — this is the
+/// contract the CI smoke step relies on.
+pub fn render_run_report(dir: &Path) -> Result<String> {
+    let trace_path = dir.join("trace.json");
+    let trace_text = std::fs::read_to_string(&trace_path)
+        .with_context(|| format!("reading {}", trace_path.display()))?;
+    let trace = Json::parse(&trace_text)
+        .map_err(|e| anyhow!("parsing {}: {e}", trace_path.display()))?;
+    let (stats, wall) = phase_breakdown(&trace)?;
+    if stats.is_empty() {
+        bail!("{}: no complete span events recorded", trace_path.display());
+    }
+
+    let prom_path = dir.join("metrics.prom");
+    let prom_text = std::fs::read_to_string(&prom_path)
+        .with_context(|| format!("reading {}", prom_path.display()))?;
+    let map = parse_prometheus(&prom_text);
+    if map.is_empty() {
+        bail!("{}: no metric samples", prom_path.display());
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("# Trace report: {}\n\n", dir.display()));
+    out.push_str(&format!(
+        "Traced window: {:.3} ms, {} distinct phases\n\n",
+        wall / 1e3,
+        stats.len()
+    ));
+    out.push_str("## Per-phase time breakdown\n\n");
+    out.push_str(&render_phase_table(&stats, wall));
+    out.push_str("\n## Quantizer health\n\n");
+    out.push_str(&render_quantizer_health(&map));
+
+    // Run summary from the step log, when present.
+    if let Ok(text) = std::fs::read_to_string(dir.join("log.jsonl")) {
+        let mut last_eval: Option<Json> = None;
+        let mut diverged_at: Option<u64> = None;
+        let mut lines = 0u64;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = Json::parse(line)
+                .map_err(|e| anyhow!("parsing {}: {e}", dir.join("log.jsonl").display()))?;
+            lines += 1;
+            if j.get("eval_loss").is_some() {
+                last_eval = Some(j.clone());
+            }
+            if let Some(s) = j.get("diverged_at_step").and_then(Json::as_usize) {
+                diverged_at = Some(s as u64);
+            }
+        }
+        out.push_str("\n## Run summary\n\n");
+        out.push_str(&format!("- log.jsonl records: {lines}\n"));
+        if let Some(j) = last_eval {
+            let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            out.push_str(&format!(
+                "- last eval @ step {}: loss {}, acc {}, clip rate {}, grad var {}\n",
+                g("step"),
+                fmt_sig(g("eval_loss"), 4),
+                fmt_sig(g("eval_acc"), 4),
+                fmt_sig(g("quant_clip_rate"), 4),
+                fmt_sig(g("quant_grad_var"), 4),
+            ));
+        }
+        match diverged_at {
+            Some(s) => out.push_str(&format!("- DIVERGED at step {s}\n")),
+            None => out.push_str("- diverged: no\n"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(events: &str) -> Json {
+        Json::parse(&format!("{{\"traceEvents\":[{events}]}}")).unwrap()
+    }
+
+    #[test]
+    fn aggregates_complete_events_by_name() {
+        let t = trace(
+            r#"{"name":"a","ph":"X","ts":0,"dur":10},
+               {"name":"b","ph":"X","ts":2,"dur":4},
+               {"name":"a","ph":"X","ts":20,"dur":30},
+               {"name":"m","ph":"i","ts":60}"#,
+        );
+        let (stats, wall) = phase_breakdown(&t).unwrap();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].name, "a"); // 40 us total, sorted first
+        assert_eq!(stats[0].count, 2);
+        assert_eq!(stats[0].total_us, 40.0);
+        assert_eq!(stats[0].max_us, 30.0);
+        assert_eq!(stats[0].mean_us(), 20.0);
+        assert_eq!(stats[1].total_us, 4.0);
+        assert_eq!(wall, 60.0); // 0 .. max(ts, ts+dur) = 60
+    }
+
+    #[test]
+    fn balanced_be_pairs_accepted_unbalanced_rejected() {
+        let ok = trace(
+            r#"{"name":"p","ph":"B","ts":0},
+               {"name":"p","ph":"E","ts":5},
+               {"name":"q","ph":"X","ts":1,"dur":2}"#,
+        );
+        assert!(phase_breakdown(&ok).is_ok());
+        let bad = trace(r#"{"name":"p","ph":"B","ts":0}"#);
+        let err = phase_breakdown(&bad).unwrap_err().to_string();
+        assert!(err.contains("unbalanced"), "{err}");
+    }
+
+    #[test]
+    fn x_without_dur_rejected() {
+        let bad = trace(r#"{"name":"p","ph":"X","ts":0}"#);
+        let err = format!("{:#}", phase_breakdown(&bad).unwrap_err());
+        assert!(err.contains("without dur"), "{err}");
+    }
+
+    #[test]
+    fn missing_trace_events_rejected() {
+        let bad = Json::parse("{}").unwrap();
+        assert!(phase_breakdown(&bad).is_err());
+    }
+
+    #[test]
+    fn quantizer_health_renders_rates() {
+        let prom = "\
+quant_tensors_total{quantizer=\"ptq\"} 10
+quant_values_total{quantizer=\"ptq\"} 1000
+quant_clipped_total{quantizer=\"ptq\"} 15
+quant_zero_codes_total{quantizer=\"ptq\"} 100
+quant_sr_variance{quantizer=\"ptq\"} 0.0625
+";
+        let map = parse_prometheus(prom);
+        let table = render_quantizer_health(&map);
+        assert!(table.contains("ptq"), "{table}");
+        assert!(table.contains("1.500"), "clip% missing: {table}");
+        assert!(table.contains("10.000"), "zero% missing: {table}");
+        assert!(table.contains("0.06250"), "var missing: {table}");
+    }
+
+    #[test]
+    fn run_report_errors_on_missing_artifacts() {
+        let dir = std::env::temp_dir().join(format!("sq_report_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(render_run_report(&dir).is_err(), "no trace.json");
+        std::fs::write(dir.join("trace.json"), "not json").unwrap();
+        assert!(render_run_report(&dir).is_err(), "unparseable trace.json");
+        std::fs::write(
+            dir.join("trace.json"),
+            r#"{"traceEvents":[{"name":"a","ph":"X","ts":0,"dur":5}]}"#,
+        )
+        .unwrap();
+        assert!(render_run_report(&dir).is_err(), "no metrics.prom");
+        std::fs::write(dir.join("metrics.prom"), "train_steps_total 3\n").unwrap();
+        let rep = render_run_report(&dir).unwrap();
+        assert!(rep.contains("Per-phase time breakdown"));
+        assert!(rep.contains("Quantizer health"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

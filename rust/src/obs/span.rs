@@ -1,0 +1,319 @@
+//! Hierarchical spans: scoped RAII timers recording into per-thread ring
+//! buffers, exported in the Chrome trace event format (`trace.json`,
+//! loadable in `chrome://tracing` / Perfetto).
+//!
+//! Each thread owns a lock-free-in-practice ring (its mutex is only ever
+//! contended by the exporter); rings register themselves in a global sink
+//! list on first use, so [`snapshot_events`] sees every thread. Spans are
+//! emitted as complete `"X"` events (one record at drop — no B/E pairing
+//! to leave unbalanced on early return), instants as `"i"`. When obs is
+//! disabled ([`crate::obs::set_enabled`]) [`span`] is inert: no clock
+//! read, no allocation, just the flag load.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Per-thread ring capacity; the oldest events are overwritten beyond it.
+pub const RING_CAP: usize = 1 << 15;
+
+/// One recorded trace event.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: String,
+    pub cat: &'static str,
+    /// `'X'` = complete span (has `dur`), `'i'` = instant.
+    pub ph: char,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub tid: u64,
+    pub args: Vec<(String, String)>,
+}
+
+#[derive(Default)]
+struct Ring {
+    events: Vec<SpanEvent>,
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, e: SpanEvent) {
+        if self.events.len() < RING_CAP {
+            self.events.push(e);
+        } else {
+            self.events[self.next] = e;
+            self.next = (self.next + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+}
+
+struct ThreadBuf {
+    tid: u64,
+    ring: Mutex<Ring>,
+}
+
+static SINKS: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn sinks() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    SINKS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn now_us() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6
+}
+
+thread_local! {
+    static LOCAL: Arc<ThreadBuf> = {
+        let buf = Arc::new(ThreadBuf {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            ring: Mutex::new(Ring::default()),
+        });
+        lock(sinks()).push(buf.clone());
+        buf
+    };
+}
+
+fn record(mut e: SpanEvent) {
+    LOCAL.with(|b| {
+        e.tid = b.tid;
+        lock(&b.ring).push(e);
+    });
+}
+
+struct Active {
+    name: &'static str,
+    cat: &'static str,
+    start_us: f64,
+}
+
+/// RAII span: records one complete event covering its lifetime on drop.
+#[must_use = "a span guard measures until it is dropped"]
+pub struct SpanGuard(Option<Active>);
+
+/// Open a span in the default category. Inert when obs is disabled.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    span_cat(name, "app")
+}
+
+/// Open a span with an explicit Chrome trace category.
+#[inline]
+pub fn span_cat(name: &'static str, cat: &'static str) -> SpanGuard {
+    if !crate::obs::enabled() {
+        return SpanGuard(None);
+    }
+    SpanGuard(Some(Active {
+        name,
+        cat,
+        start_us: now_us(),
+    }))
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.0.take() {
+            let end = now_us();
+            record(SpanEvent {
+                name: a.name.to_string(),
+                cat: a.cat,
+                ph: 'X',
+                ts_us: a.start_us,
+                dur_us: (end - a.start_us).max(0.0),
+                tid: 0,
+                args: Vec::new(),
+            });
+        }
+    }
+}
+
+/// Record a zero-duration instant event with structured args — the obs
+/// event stream (divergence, checkpoint writes, ...).
+pub fn instant(name: &str, args: &[(&str, String)]) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    record(SpanEvent {
+        name: name.to_string(),
+        cat: "event",
+        ph: 'i',
+        ts_us: now_us(),
+        dur_us: 0.0,
+        tid: 0,
+        args: args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+    });
+}
+
+/// Copy of every recorded event across all threads, sorted by start time.
+pub fn snapshot_events() -> Vec<SpanEvent> {
+    let bufs: Vec<Arc<ThreadBuf>> = lock(sinks()).clone();
+    let mut out = Vec::new();
+    for b in bufs {
+        out.extend(lock(&b.ring).events.iter().cloned());
+    }
+    out.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    out
+}
+
+/// Total events dropped to ring overwrites (all threads).
+pub fn dropped_events() -> u64 {
+    let bufs: Vec<Arc<ThreadBuf>> = lock(sinks()).clone();
+    bufs.iter().map(|b| lock(&b.ring).dropped).sum()
+}
+
+/// Drop all recorded events (test isolation / per-run trace windows).
+pub fn clear() {
+    let bufs: Vec<Arc<ThreadBuf>> = lock(sinks()).clone();
+    for b in bufs {
+        let mut r = lock(&b.ring);
+        r.events.clear();
+        r.next = 0;
+        r.dropped = 0;
+    }
+}
+
+/// Encode events as a Chrome trace-event-format document.
+pub fn chrome_trace(events: &[SpanEvent]) -> Json {
+    let mut list = Vec::with_capacity(events.len());
+    for e in events {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::from(e.name.clone()));
+        m.insert("cat".to_string(), Json::from(e.cat));
+        m.insert("ph".to_string(), Json::from(e.ph.to_string()));
+        m.insert("ts".to_string(), Json::Num(e.ts_us));
+        if e.ph == 'X' {
+            m.insert("dur".to_string(), Json::Num(e.dur_us));
+        }
+        if e.ph == 'i' {
+            // instant scope: thread
+            m.insert("s".to_string(), Json::from("t"));
+        }
+        m.insert("pid".to_string(), Json::from(1usize));
+        m.insert("tid".to_string(), Json::from(e.tid as usize));
+        if !e.args.is_empty() {
+            m.insert(
+                "args".to_string(),
+                Json::Obj(
+                    e.args
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(v.clone())))
+                        .collect(),
+                ),
+            );
+        }
+        list.push(Json::Obj(m));
+    }
+    obj([
+        ("displayTimeUnit", Json::from("ms")),
+        ("traceEvents", Json::Arr(list)),
+    ])
+}
+
+/// Write the current global snapshot as `trace.json` at `path`.
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let doc = chrome_trace(&snapshot_events());
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_export_as_complete_events() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        clear();
+        {
+            let _outer = span("span_test/outer");
+            {
+                let _inner = span("span_test/inner");
+                std::hint::black_box(0u64);
+            }
+        }
+        instant("span_test/mark", &[("k", "v".to_string())]);
+        let evs = snapshot_events();
+        let outer = evs.iter().find(|e| e.name == "span_test/outer").unwrap();
+        let inner = evs.iter().find(|e| e.name == "span_test/inner").unwrap();
+        assert_eq!(outer.ph, 'X');
+        assert_eq!(inner.ph, 'X');
+        // inner starts no earlier and is no longer than outer
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(inner.dur_us <= outer.dur_us);
+        let mark = evs.iter().find(|e| e.name == "span_test/mark").unwrap();
+        assert_eq!(mark.ph, 'i');
+        assert_eq!(mark.args, vec![("k".to_string(), "v".to_string())]);
+    }
+
+    #[test]
+    fn chrome_trace_parses_with_own_json_codec() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        clear();
+        {
+            let _s = span("span_test/chrome");
+        }
+        let doc = chrome_trace(&snapshot_events());
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).expect("trace.json must parse");
+        let evs = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let e = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("span_test/chrome"))
+            .unwrap();
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        clear();
+        crate::obs::set_enabled(false);
+        {
+            let _s = span("span_test/disabled");
+        }
+        instant("span_test/disabled_i", &[]);
+        crate::obs::set_enabled(true);
+        assert!(snapshot_events()
+            .iter()
+            .all(|e| !e.name.starts_with("span_test/disabled")));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        clear();
+        for _ in 0..RING_CAP + 10 {
+            let _s = span("span_test/ring");
+        }
+        let n = snapshot_events()
+            .iter()
+            .filter(|e| e.name == "span_test/ring")
+            .count();
+        assert!(n <= RING_CAP);
+        assert!(dropped_events() >= 10);
+        clear();
+    }
+}

@@ -15,7 +15,7 @@
 //! matmuls, 2ND FLOPs" the paper's §4.3 overhead study measures — rather
 //! than materializing a dense N x N matrix like the JAX trace does.
 
-use super::{Mat, Quantized, EPS_RANGE, MAX_SCALE};
+use super::{Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
 use crate::quant::sr;
 use crate::util::rng::Pcg32;
 
@@ -235,11 +235,30 @@ pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
 
 /// BHQ with an explicit group-count proxy (the `ablate-bhq-proxy` knob).
 pub fn quantize_with(x: &Mat, nbins: f32, rng: &mut Pcg32, proxy: Proxy) -> Quantized {
+    let tel = crate::obs::quant::bhq();
+    let (q, st) = quantize_stats(x, nbins, rng, proxy, tel.should_sample());
+    tel.record(&st);
+    q
+}
+
+/// [`quantize_with`] plus per-call telemetry; identical RNG draw order.
+/// The exact SR variance is measured in *transformed* space,
+/// sum p(1-p)/srow_k^2 — the Thm-1 noise the reflection is designed to
+/// shrink — and computed only when `sample_variance`.
+pub fn quantize_stats(
+    x: &Mat,
+    nbins: f32,
+    rng: &mut Pcg32,
+    proxy: Proxy,
+    sample_variance: bool,
+) -> (Quantized, QuantStats) {
+    let mut st = QuantStats::default();
     // NaN anywhere poisons the whole output: the Householder reflection
     // mixes rows within a group, and `sr(NaN).max(0.0)` would otherwise
     // silently turn a diverged row into finite garbage for the group.
     if x.data.iter().any(|v| v.is_nan()) {
-        return super::poisoned(x.rows, x.cols);
+        st.poisoned_rows = x.rows as u64;
+        return (super::poisoned(x.rows, x.cols), st);
     }
     let plan = build_plan_with(x, proxy);
     let n = x.rows;
@@ -267,13 +286,32 @@ pub fn quantize_with(x: &Mat, nbins: f32, rng: &mut Pcg32, proxy: Proxy) -> Quan
     // Per-row zero point in transformed space + SR.
     let mut codes = Mat::zeros(n, d);
     let mut zs = vec![0.0f32; n];
+    let mut pvar = 0.0f64;
     for k in 0..n {
         let lo = ys[k].iter().fold(f32::INFINITY, |a, &v| a.min(v));
         zs[k] = if lo.is_finite() { lo } else { 0.0 };
+        let inv_s2 = if sample_variance {
+            1.0 / f64::from(srow[k]).powi(2)
+        } else {
+            0.0
+        };
         let crow = codes.row_mut(k);
         for (c, &v) in crow.iter_mut().zip(&ys[k]) {
-            *c = sr::sr(v - zs[k], rng).max(0.0);
+            let t = v - zs[k];
+            let raw = sr::sr(t, rng);
+            let q = raw.max(0.0);
+            st.clipped += u64::from(raw != q);
+            st.zero_codes += u64::from(q == 0.0);
+            if sample_variance {
+                let p = f64::from(t) - f64::from(t.floor());
+                pvar += p * (1.0 - p) * inv_s2;
+            }
+            *c = q;
         }
+    }
+    st.values = (n * d) as u64;
+    if sample_variance {
+        st.sr_variance = Some(pvar);
     }
 
     // Reconstruct: X^ = diag(1/s) Q (codes + z)   (Q^2 = I).
@@ -294,11 +332,14 @@ pub fn quantize_with(x: &Mat, nbins: f32, rng: &mut Pcg32, proxy: Proxy) -> Quan
             *o = v * inv_s;
         }
     }
-    Quantized {
-        codes,
-        deq,
-        row_bin_size: row_bin,
-    }
+    (
+        Quantized {
+            codes,
+            deq,
+            row_bin_size: row_bin,
+        },
+        st,
+    )
 }
 
 #[cfg(test)]
@@ -442,6 +483,31 @@ mod tests {
             assert!(q.deq.data.iter().all(|v| *v == 0.0));
         }
         assert_eq!(select_group_count(&[]), 0);
+    }
+
+    #[test]
+    fn stats_cover_every_value_and_count_row_minima_as_zero_codes() {
+        let x = outlier(8, 16, 23, 4.0, 0.05);
+        let mut rng = Pcg32::new(5, 5);
+        let (q, st) = quantize_stats(&x, 15.0, &mut rng, Proxy::Extended, true);
+        assert_eq!(st.values, 8 * 16);
+        // each transformed row's minimum codes to sr(0) = 0 exactly
+        assert!(st.zero_codes >= 8, "zero codes {}", st.zero_codes);
+        assert_eq!(st.poisoned_rows, 0);
+        let v = st.sr_variance.expect("sampled");
+        assert!(v.is_finite() && v >= 0.0, "sr variance {v}");
+        assert!(q.deq.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stats_path_consumes_identical_rng_draws() {
+        let x = outlier(8, 8, 29, 3.0, 0.1);
+        let mut ra = Pcg32::new(19, 6);
+        let mut rb = Pcg32::new(19, 6);
+        let qa = quantize_stats(&x, 15.0, &mut ra, Proxy::Extended, true).0;
+        let qb = quantize_stats(&x, 15.0, &mut rb, Proxy::Extended, false).0;
+        assert_eq!(qa.deq, qb.deq);
+        assert_eq!(ra.uniform(), rb.uniform(), "rng streams diverged");
     }
 
     #[test]

@@ -89,6 +89,23 @@ impl GradQuantizer {
     }
 }
 
+/// Per-call telemetry emitted by the native quantizers alongside their
+/// [`Quantized`] output and folded into `obs::quant` counters/gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantStats {
+    /// Scalar values quantized (excludes NaN-poisoned rows).
+    pub values: u64,
+    /// Codes that the final clamp actually moved (out-of-range SR draws).
+    pub clipped: u64,
+    /// Codes that landed exactly on zero.
+    pub zero_codes: u64,
+    /// Rows replaced by NaN poison because the input carried NaN.
+    pub poisoned_rows: u64,
+    /// Exact SR variance sum p(1-p)/scale^2 (Thm-1 noise term), computed
+    /// only on sampled calls.
+    pub sr_variance: Option<f64>,
+}
+
 /// Output of an affine quantizer: integer codes, dequantized values, and
 /// the per-row bin sizes (1/scale) the Fig-4 analysis plots.
 pub struct Quantized {

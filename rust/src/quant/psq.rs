@@ -8,20 +8,38 @@
 //! R(X) = max_i R(x_i). O(N*D) FP32 overhead, same as FBGEMM's row-wise
 //! path.
 
-use super::{Mat, Quantized, EPS_RANGE, MAX_SCALE};
+use super::{Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
 use crate::quant::sr;
 use crate::util::rng::Pcg32;
 
 pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
+    let tel = crate::obs::quant::psq();
+    let (q, st) = quantize_stats(x, nbins, rng, tel.should_sample());
+    tel.record(&st);
+    q
+}
+
+/// [`quantize`] plus per-call telemetry; identical RNG draw order. The
+/// exact SR variance sum p(1-p)/scale_i^2 is computed only when
+/// `sample_variance`.
+pub fn quantize_stats(
+    x: &Mat,
+    nbins: f32,
+    rng: &mut Pcg32,
+    sample_variance: bool,
+) -> (Quantized, QuantStats) {
+    let mut st = QuantStats::default();
     let mm = x.row_minmax();
     let mut codes = Mat::zeros(x.rows, x.cols);
     let mut deq = Mat::zeros(x.rows, x.cols);
     let mut bins = Vec::with_capacity(x.rows);
+    let mut pvar = 0.0f64;
     for i in 0..x.rows {
         let (lo, hi) = mm[i];
         // NaN row: poison that row only (clean rows are still usable —
         // the per-sample axis isolates a diverged sample's gradient).
         if (hi - lo).is_nan() {
+            st.poisoned_rows += 1;
             bins.push(f32::NAN);
             for c in codes.row_mut(i) {
                 *c = f32::NAN;
@@ -34,11 +52,20 @@ pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
         let range = (hi - lo).max(EPS_RANGE);
         let scale = (nbins / range).min(MAX_SCALE);
         bins.push(1.0 / scale);
+        st.values += x.cols as u64;
         let src = x.row(i);
         let crow = codes.row_mut(i);
         for (c, &v) in crow.iter_mut().zip(src) {
             let t = scale * (v - lo);
-            *c = sr::sr(t, rng).clamp(0.0, nbins);
+            let raw = sr::sr(t, rng);
+            let q = raw.clamp(0.0, nbins);
+            st.clipped += u64::from(raw != q);
+            st.zero_codes += u64::from(q == 0.0);
+            if sample_variance {
+                let p = f64::from(t) - f64::from(t.floor());
+                pvar += p * (1.0 - p) / f64::from(scale).powi(2);
+            }
+            *c = q;
         }
         let drow = deq.row_mut(i);
         let crow = codes.row(i);
@@ -46,11 +73,17 @@ pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
             *d = c / scale + lo;
         }
     }
-    Quantized {
-        codes,
-        deq,
-        row_bin_size: bins,
+    if sample_variance {
+        st.sr_variance = Some(pvar);
     }
+    (
+        Quantized {
+            codes,
+            deq,
+            row_bin_size: bins,
+        },
+        st,
+    )
 }
 
 /// §4.1 bound: D/(4B^2) * sum_i R(x_i)^2.
@@ -145,6 +178,32 @@ mod tests {
                 assert!((d - v).abs() <= bin * 1.001);
             }
         }
+    }
+
+    #[test]
+    fn stats_count_zero_codes_and_poisoned_rows_exactly() {
+        // Row 0 = [0,0,0,1]: codes 0,0,0,15 deterministically (sr(0)=0,
+        // sr(15)=15 for any u<1) => 3 zero codes. Row 1 carries NaN.
+        let x = Mat::from_vec(2, 4, vec![0.0, 0.0, 0.0, 1.0, 1.0, f32::NAN, 2.0, 3.0]);
+        let mut rng = Pcg32::new(13, 5);
+        let (q, st) = quantize_stats(&x, 15.0, &mut rng, true);
+        assert_eq!(st.values, 4, "only the clean row counts");
+        assert_eq!(st.zero_codes, 3);
+        assert_eq!(st.clipped, 0);
+        assert_eq!(st.poisoned_rows, 1);
+        assert_eq!(st.sr_variance, Some(0.0));
+        assert_eq!(&q.codes.data[..4], &[0.0, 0.0, 0.0, 15.0]);
+    }
+
+    #[test]
+    fn stats_path_consumes_identical_rng_draws() {
+        let x = skewed(6, 10, 4);
+        let mut ra = Pcg32::new(17, 8);
+        let mut rb = Pcg32::new(17, 8);
+        let qa = quantize_stats(&x, 15.0, &mut ra, true).0;
+        let qb = quantize_stats(&x, 15.0, &mut rb, false).0;
+        assert_eq!(qa.deq, qb.deq);
+        assert_eq!(ra.uniform(), rb.uniform(), "rng streams diverged");
     }
 
     #[test]

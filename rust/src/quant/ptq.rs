@@ -6,7 +6,7 @@
 //! outlier row inflates the bin size for *every* row, which is exactly
 //! the failure mode PSQ/BHQ repair.
 
-use super::{Mat, Quantized, EPS_RANGE, MAX_SCALE};
+use super::{Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
 use crate::quant::sr;
 use crate::util::rng::Pcg32;
 
@@ -14,14 +14,33 @@ use crate::util::rng::Pcg32;
 /// returns a fully NaN-poisoned output (see [`super::poisoned`]): the
 /// `.max(EPS_RANGE)` floor would otherwise swallow a NaN range.
 pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
+    let tel = crate::obs::quant::ptq();
+    let (q, st) = quantize_stats(x, nbins, rng, tel.should_sample());
+    tel.record(&st);
+    q
+}
+
+/// [`quantize`] plus per-call telemetry. Consumes the same RNG draws as
+/// the untracked path — determinism-given-seed is unaffected. The exact
+/// SR variance sum p(1-p)/scale^2 is computed only when
+/// `sample_variance` (it costs an extra f64 op per element).
+pub fn quantize_stats(
+    x: &Mat,
+    nbins: f32,
+    rng: &mut Pcg32,
+    sample_variance: bool,
+) -> (Quantized, QuantStats) {
+    let mut st = QuantStats::default();
     let (lo, hi) = x.minmax();
     if (hi - lo).is_nan() {
-        return super::poisoned(x.rows, x.cols);
+        st.poisoned_rows = x.rows as u64;
+        return (super::poisoned(x.rows, x.cols), st);
     }
     let range = (hi - lo).max(EPS_RANGE);
     let scale = (nbins / range).min(MAX_SCALE);
     let mut codes = Mat::zeros(x.rows, x.cols);
     let mut deq = Mat::zeros(x.rows, x.cols);
+    let mut pvar = 0.0f64;
     for ((c, d), &v) in codes
         .data
         .iter_mut()
@@ -29,15 +48,29 @@ pub fn quantize(x: &Mat, nbins: f32, rng: &mut Pcg32) -> Quantized {
         .zip(&x.data)
     {
         let t = scale * (v - lo);
-        let q = sr::sr(t, rng).clamp(0.0, nbins);
+        let raw = sr::sr(t, rng);
+        let q = raw.clamp(0.0, nbins);
+        st.clipped += u64::from(raw != q);
+        st.zero_codes += u64::from(q == 0.0);
+        if sample_variance {
+            let p = f64::from(t) - f64::from(t.floor());
+            pvar += p * (1.0 - p);
+        }
         *c = q;
         *d = q / scale + lo;
     }
-    Quantized {
-        codes,
-        deq,
-        row_bin_size: vec![1.0 / scale; x.rows],
+    st.values = x.data.len() as u64;
+    if sample_variance {
+        st.sr_variance = Some(pvar / f64::from(scale).powi(2));
     }
+    (
+        Quantized {
+            codes,
+            deq,
+            row_bin_size: vec![1.0 / scale; x.rows],
+        },
+        st,
+    )
 }
 
 /// Deterministic round-to-nearest PTQ (the forward-path Q_f / Q_theta).
@@ -121,6 +154,47 @@ mod tests {
         assert!(q.deq.data.iter().all(|v| v.is_nan()));
         assert!(q.codes.data.iter().all(|v| v.is_nan()));
         assert!(q.row_bin_size.iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn stats_count_zero_codes_exactly() {
+        // t = 15*(v - 0): sr(0) = floor(u) = 0 always, sr(15) = 15 always
+        // (u < 1) — so exactly three zero codes and no clips, regardless
+        // of the SR draws.
+        let x = Mat::from_vec(2, 2, vec![0.0, 0.0, 0.0, 1.0]);
+        let mut rng = Pcg32::new(9, 9);
+        let (q, st) = quantize_stats(&x, 15.0, &mut rng, true);
+        assert_eq!(st.values, 4);
+        assert_eq!(st.zero_codes, 3);
+        assert_eq!(st.clipped, 0);
+        assert_eq!(st.poisoned_rows, 0);
+        // p = 0 at every point => exact SR variance 0
+        assert_eq!(st.sr_variance, Some(0.0));
+        assert_eq!(q.codes.data, vec![0.0, 0.0, 0.0, 15.0]);
+    }
+
+    #[test]
+    fn stats_path_consumes_identical_rng_draws() {
+        let mut x = Mat::zeros(4, 8);
+        let mut rng0 = Pcg32::new(11, 2);
+        for v in &mut x.data {
+            *v = rng0.normal();
+        }
+        let mut ra = Pcg32::new(21, 4);
+        let mut rb = Pcg32::new(21, 4);
+        let qa = quantize_stats(&x, 15.0, &mut ra, true).0;
+        let qb = quantize_stats(&x, 15.0, &mut rb, false).0;
+        assert_eq!(qa.deq, qb.deq);
+        assert_eq!(ra.uniform(), rb.uniform(), "rng streams diverged");
+    }
+
+    #[test]
+    fn nan_input_reports_poisoned_rows() {
+        let x = Mat::from_vec(2, 2, vec![1.0, f32::NAN, 0.5, -0.5]);
+        let mut rng = Pcg32::new(3, 3);
+        let (_, st) = quantize_stats(&x, 15.0, &mut rng, true);
+        assert_eq!(st.poisoned_rows, 2);
+        assert_eq!(st.values, 0);
     }
 
     #[test]

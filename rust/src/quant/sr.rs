@@ -14,11 +14,25 @@ pub fn sr(x: f32, rng: &mut Pcg32) -> f32 {
 }
 
 /// Stochastically round a slice in place, clipping codes to [0, nbins].
-#[inline]
-pub fn sr_clip_slice(xs: &mut [f32], nbins: f32, rng: &mut Pcg32) {
-    for x in xs {
-        *x = (*x + rng.uniform()).floor().clamp(0.0, nbins);
+/// Reports clip/zero counts through the `sr` telemetry sink and returns
+/// the number of codes the clamp actually moved.
+pub fn sr_clip_slice(xs: &mut [f32], nbins: f32, rng: &mut Pcg32) -> u64 {
+    let mut clipped = 0u64;
+    let mut zeros = 0u64;
+    for x in xs.iter_mut() {
+        let raw = (*x + rng.uniform()).floor();
+        let c = raw.clamp(0.0, nbins);
+        clipped += u64::from(raw != c);
+        zeros += u64::from(c == 0.0);
+        *x = c;
     }
+    crate::obs::quant::sr().record(&crate::quant::QuantStats {
+        values: xs.len() as u64,
+        clipped,
+        zero_codes: zeros,
+        ..Default::default()
+    });
+    clipped
 }
 
 /// Exact SR variance of a scaled tensor: sum over elements of p(1-p)
@@ -94,6 +108,21 @@ mod tests {
         for &v in &xs {
             assert!((0.0..=255.0).contains(&v), "{v}");
             assert_eq!(v.fract(), 0.0);
+        }
+    }
+
+    /// Clip counting is exact on known out-of-range values: -1.5 rounds
+    /// to -2 or -1 (always < 0) and 300.0 to 300 (always > 255) for any
+    /// SR draw u in [0,1); 0.2 and 254.2 can never leave [0, 255].
+    #[test]
+    fn clip_count_exact_on_crafted_out_of_range_values() {
+        for seed in 0..32u64 {
+            let mut rng = Pcg32::new(seed, seed.wrapping_mul(7));
+            let mut xs = vec![-1.5f32, 0.2, 300.0, 254.2];
+            let clipped = sr_clip_slice(&mut xs, 255.0, &mut rng);
+            assert_eq!(clipped, 2, "seed {seed}: {xs:?}");
+            assert_eq!(xs[0], 0.0);
+            assert_eq!(xs[2], 255.0);
         }
     }
 }

@@ -9,7 +9,8 @@
 
 use anyhow::{bail, Result};
 
-use super::artifact::ArtifactMeta;
+use super::artifact::{ArtifactMeta, StepKind};
+use crate::obs;
 
 /// Host-side tensor crossing the ABI.
 #[derive(Clone, Debug)]
@@ -64,11 +65,29 @@ pub trait ExecutorBackend {
 pub struct Executor {
     pub meta: ArtifactMeta,
     backend: Box<dyn ExecutorBackend>,
+    dispatches: obs::Counter,
+    latency: obs::HistogramMetric,
 }
 
 impl Executor {
     pub fn new(meta: ArtifactMeta, backend: Box<dyn ExecutorBackend>) -> Self {
-        Self { meta, backend }
+        let labels = [("backend", backend.name()), ("step", meta.step.name())];
+        let m = obs::metrics();
+        let dispatches = m.counter(
+            &obs::registry::labeled("executor_dispatch_total", &labels),
+            "step executions dispatched to a backend",
+        );
+        let latency = m.histogram(
+            &obs::registry::labeled("executor_dispatch_seconds", &labels),
+            "wall time of one backend execute",
+            &obs::registry::TIME_BUCKETS,
+        );
+        Self {
+            meta,
+            backend,
+            dispatches,
+            latency,
+        }
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -106,7 +125,21 @@ impl Executor {
                 );
             }
         }
-        let outputs = self.backend.execute(&self.meta, inputs)?;
+        let outputs = if obs::enabled() {
+            let _sp = obs::span(match self.meta.step {
+                StepKind::Train => "exec/train",
+                StepKind::Probe => "exec/probe",
+                StepKind::Eval => "exec/eval",
+                StepKind::ActGrad => "exec/actgrad",
+            });
+            let t0 = std::time::Instant::now();
+            let out = self.backend.execute(&self.meta, inputs)?;
+            self.latency.observe(t0.elapsed().as_secs_f64());
+            self.dispatches.inc();
+            out
+        } else {
+            self.backend.execute(&self.meta, inputs)?
+        };
         if outputs.len() != self.meta.outputs.len() {
             bail!(
                 "{}: expected {} outputs, got {}",

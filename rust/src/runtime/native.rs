@@ -346,10 +346,16 @@ fn train_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Res
     let lr = f64::from(scalar_f32(&inputs[5])?);
     let bits = scalar_f32(&inputs[6])?;
 
-    let fwd = forward(dims, params, x, y)?;
+    let fwd = {
+        let _sp = crate::obs::span("native/forward");
+        forward(dims, params, x, y)?
+    };
     let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
     let mut rng = seed_rng(seed);
-    let (grad, _) = backward(dims, params, x, &fwd, y, quant, &mut rng);
+    let (grad, _) = {
+        let _sp = crate::obs::span("native/backward");
+        backward(dims, params, x, &fwd, y, quant, &mut rng)
+    };
 
     let mu = meta.momentum;
     let mut new_params = params.to_vec();
@@ -373,10 +379,16 @@ fn probe_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Res
     let seed = scalar_f32(&inputs[3])?;
     let bits = scalar_f32(&inputs[4])?;
 
-    let fwd = forward(dims, params, x, y)?;
+    let fwd = {
+        let _sp = crate::obs::span("native/forward");
+        forward(dims, params, x, y)?
+    };
     let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
     let mut rng = seed_rng(seed);
-    let (grad, _) = backward(dims, params, x, &fwd, y, quant, &mut rng);
+    let (grad, _) = {
+        let _sp = crate::obs::span("native/backward");
+        backward(dims, params, x, &fwd, y, quant, &mut rng)
+    };
     Ok(vec![
         HostTensor::F32(vec![fwd.loss as f32]),
         HostTensor::F32(grad),

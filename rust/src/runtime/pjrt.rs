@@ -31,6 +31,7 @@ impl PjrtRuntime {
 
     /// Load the artifact's HLO text and compile it on the PJRT client.
     pub fn load(&self, meta: &ArtifactMeta) -> Result<PjrtBackend> {
+        let _sp = crate::obs::span("pjrt/compile");
         let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
             .with_context(|| format!("loading {}", meta.hlo_path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -53,6 +54,7 @@ impl ExecutorBackend for PjrtBackend {
     }
 
     fn execute(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<StepOutputs> {
+        let _sp = crate::obs::span("pjrt/execute");
         let mut lits = Vec::with_capacity(inputs.len());
         for (t, spec) in inputs.iter().zip(&meta.inputs) {
             lits.push(to_literal(t, &spec.shape)?);

@@ -1,10 +1,15 @@
 //! Benchmark harness substrate (criterion is unavailable offline).
 //!
-//! Measures wall time with warmup, reports median / mean / p10 / p90 and
-//! derived throughput, and emits both human-readable lines and a CSV
-//! under `results/bench/`. Used by `cargo bench` targets (harness=false).
+//! Measures wall time with warmup, reports median / mean / p10 / p50 /
+//! p90 / p99 and derived throughput, and emits human-readable lines, a
+//! CSV under `results/bench/`, and — via [`Bench::finish`] — a
+//! `BENCH_<name>.json` metrics-registry snapshot so bench trajectories
+//! ride the same exporter as run metrics. Used by `cargo bench` targets
+//! (harness=false).
 
 use std::time::Instant;
+
+use anyhow::Result;
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -13,7 +18,9 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub mean_ns: f64,
     pub p10_ns: f64,
+    pub p50_ns: f64,
     pub p90_ns: f64,
+    pub p99_ns: f64,
     /// Optional work units per iteration (elements, FLOPs) for throughput.
     pub units_per_iter: f64,
 }
@@ -58,7 +65,7 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
-/// Collected results + CSV emission.
+/// Collected results + CSV / metrics-registry emission.
 #[derive(Default)]
 pub struct Bench {
     pub results: Vec<BenchResult>,
@@ -87,18 +94,19 @@ impl Bench {
             f();
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
+        let pct = |q: usize| samples[(samples.len() * q / 100).min(samples.len() - 1)];
         let median = samples[samples.len() / 2];
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let p10 = samples[samples.len() / 10];
-        let p90 = samples[samples.len() * 9 / 10];
         let r = BenchResult {
             name: name.to_string(),
             iters,
             median_ns: median,
             mean_ns: mean,
-            p10_ns: p10,
-            p90_ns: p90,
+            p10_ns: pct(10),
+            p50_ns: median,
+            p90_ns: pct(90),
+            p99_ns: pct(99),
             units_per_iter: units,
         };
         println!("{}", r.human());
@@ -107,16 +115,64 @@ impl Bench {
     }
 
     /// Write all results to `results/bench/<file>.csv`.
-    pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
-        std::fs::create_dir_all("results/bench")?;
-        let mut out = String::from("name,iters,median_ns,mean_ns,p10_ns,p90_ns,units_per_iter\n");
+    pub fn write_csv(&self, file: &str) -> Result<()> {
+        let mut w = crate::metrics::CsvWriter::create(
+            format!("results/bench/{file}.csv"),
+            &[
+                "name",
+                "iters",
+                "median_ns",
+                "mean_ns",
+                "p10_ns",
+                "p50_ns",
+                "p90_ns",
+                "p99_ns",
+                "units_per_iter",
+            ],
+        )?;
         for r in &self.results {
-            out.push_str(&format!(
-                "{},{},{},{},{},{},{}\n",
-                r.name, r.iters, r.median_ns, r.mean_ns, r.p10_ns, r.p90_ns, r.units_per_iter
-            ));
+            w.row(&[
+                r.name.clone(),
+                r.iters.to_string(),
+                r.median_ns.to_string(),
+                r.mean_ns.to_string(),
+                r.p10_ns.to_string(),
+                r.p50_ns.to_string(),
+                r.p90_ns.to_string(),
+                r.p99_ns.to_string(),
+                r.units_per_iter.to_string(),
+            ])?;
         }
-        std::fs::write(format!("results/bench/{file}.csv"), out)
+        Ok(())
+    }
+
+    /// Publish every result as labeled gauges in the global metrics
+    /// registry (`bench_median_ns{bench="..."}` etc.). Requires obs to
+    /// be enabled ([`crate::obs::set_enabled`]) — gauge sets are gated.
+    pub fn export_metrics(&self) {
+        let m = crate::obs::metrics();
+        for r in &self.results {
+            let labels = [("bench", r.name.as_str())];
+            let l = |base: &str| crate::obs::registry::labeled(base, &labels);
+            m.gauge(&l("bench_median_ns"), "bench median ns/iter").set(r.median_ns);
+            m.gauge(&l("bench_mean_ns"), "bench mean ns/iter").set(r.mean_ns);
+            m.gauge(&l("bench_p50_ns"), "bench p50 ns/iter").set(r.p50_ns);
+            m.gauge(&l("bench_p99_ns"), "bench p99 ns/iter").set(r.p99_ns);
+            if r.units_per_iter > 0.0 {
+                m.gauge(&l("bench_units_per_sec"), "bench throughput")
+                    .set(r.units_per_sec());
+            }
+        }
+    }
+
+    /// CSV + registry export + `results/bench/BENCH_<file>.json` snapshot
+    /// — the uniform trajectory artifact every bench target emits.
+    pub fn finish(&self, file: &str) -> Result<()> {
+        self.export_metrics();
+        self.write_csv(file)?;
+        let snap = crate::obs::metrics().snapshot_json().to_string_pretty();
+        std::fs::write(format!("results/bench/BENCH_{file}.json"), snap)?;
+        Ok(())
     }
 }
 
@@ -136,7 +192,36 @@ mod tests {
         });
         assert!(r.median_ns > 0.0);
         assert!(r.units_per_sec() > 0.0);
+        assert_eq!(r.p50_ns, r.median_ns);
+        assert!(r.p10_ns <= r.p50_ns);
+        assert!(r.p50_ns <= r.p90_ns);
+        assert!(r.p90_ns <= r.p99_ns);
         std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn export_registers_labeled_gauges() {
+        let _g = crate::obs::testutil::serial();
+        crate::obs::set_enabled(true);
+        let b = Bench {
+            results: vec![BenchResult {
+                name: "bench_test_export".into(),
+                iters: 5,
+                median_ns: 100.0,
+                mean_ns: 110.0,
+                p10_ns: 90.0,
+                p50_ns: 100.0,
+                p90_ns: 130.0,
+                p99_ns: 150.0,
+                units_per_iter: 10.0,
+            }],
+        };
+        b.export_metrics();
+        let text = crate::obs::metrics().render_prometheus();
+        assert!(
+            text.contains("bench_p99_ns{bench=\"bench_test_export\"} 150"),
+            "{text}"
+        );
     }
 
     #[test]

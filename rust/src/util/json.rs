@@ -98,6 +98,20 @@ impl Json {
         out
     }
 
+    /// Single-line form for JSONL sinks. Same escaping as the pretty
+    /// writer ([`write_escaped`]), so non-ASCII and control characters
+    /// stay valid JSON.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
+    /// Compact-serialize into an existing buffer.
+    pub fn write_compact(&self, out: &mut String) {
+        self.write(out, 0, false);
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -426,6 +440,26 @@ mod tests {
         let j = Json::Str("a\"b\\c\nd\te\u{1}".to_string());
         let s = j.to_string_pretty();
         assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn compact_handles_non_ascii_and_controls() {
+        // The old metrics write_compact used Rust's {:?} debug escaping,
+        // which emits \u{1f600}-style escapes — invalid JSON. The shared
+        // writer must keep raw UTF-8 and only \uXXXX-escape controls.
+        let j = obj([
+            ("s", Json::from("é😀\u{1}\"\\")),
+            ("n", Json::from(1.5)),
+            ("a", (0..2).map(|b| b as f64).collect()),
+        ]);
+        let s = j.to_string_compact();
+        assert!(!s.contains('\n'));
+        assert!(!s.contains("\\u{"), "rust debug escape leaked: {s}");
+        assert!(s.contains("😀"), "emoji must stay raw utf-8: {s}");
+        assert_eq!(Json::parse(&s).unwrap(), j);
+        let mut buf = String::from("x");
+        j.write_compact(&mut buf);
+        assert_eq!(&buf[1..], s);
     }
 
     #[test]

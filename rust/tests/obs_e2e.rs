@@ -1,0 +1,150 @@
+//! End-to-end tests for the observability stack: a real native training
+//! run must leave a run directory whose obs artifacts (metrics.prom,
+//! trace.json, metrics.jsonl, log.jsonl) parse with our own readers and
+//! feed the `trace-report` renderer.
+//!
+//! These tests share process-global obs state (registry, span rings, the
+//! enabled flag), so they serialize on a local mutex and never disable
+//! obs — the overhead bench covers the disabled path in its own process.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use statquant::config::TrainConfig;
+use statquant::coordinator::Trainer;
+use statquant::obs;
+use statquant::runtime::{native, MlpSpec, Registry, Runtime};
+use statquant::util::json::Json;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn setup(tag: &str) -> (PathBuf, Registry, Runtime) {
+    let dir = std::env::temp_dir().join(format!("sq_obs_e2e_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    native::write_artifacts(&dir, &MlpSpec::default()).unwrap();
+    let reg = Registry::open(&dir).unwrap();
+    (dir, reg, Runtime::native())
+}
+
+fn base_cfg(artifacts: &Path, variant: &str, steps: u64) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        variant: variant.into(),
+        steps,
+        lr: 0.05,
+        bits: 5.0,
+        eval_every: 10,
+        eval_batches: 2,
+        seed: 3,
+        artifacts_dir: artifacts.display().to_string(),
+        out_dir: artifacts.join("runs").display().to_string(),
+        ..TrainConfig::default()
+    }
+}
+
+fn read_jsonl_lines(path: &Path) -> Vec<Json> {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad jsonl line {l:?}: {e}")))
+        .collect()
+}
+
+#[test]
+fn training_emits_parseable_obs_artifacts() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_enabled(true);
+    let (dir, reg, rt) = setup("artifacts");
+    let cfg = base_cfg(&dir, "ptq", 30);
+    let run_dir = PathBuf::from(&cfg.out_dir).join(cfg.run_name());
+    let mut tr = Trainer::new(&rt, &reg, cfg).unwrap();
+    let report = tr.train().unwrap();
+    assert!(!report.diverged);
+
+    // Prometheus text round-trips our own parser and carries the
+    // counters the trainer, quantizers, and executor must have bumped.
+    let prom = std::fs::read_to_string(run_dir.join("metrics.prom")).unwrap();
+    let samples = obs::registry::parse_prometheus(&prom);
+    assert!(
+        samples.get("train_steps_total").copied().unwrap_or(0.0) >= 30.0,
+        "train_steps_total missing or too small in:\n{prom}"
+    );
+    assert!(
+        samples
+            .get("quant_values_total{quantizer=\"ptq\"}")
+            .copied()
+            .unwrap_or(0.0)
+            > 0.0,
+        "ptq telemetry never fired"
+    );
+    assert!(
+        samples.keys().any(|k| k.starts_with("executor_dispatch_total")),
+        "no executor dispatch counters"
+    );
+
+    // Chrome trace parses and aggregates; every instrumented phase of
+    // the hot loop shows up.
+    let trace = Json::parse(&std::fs::read_to_string(run_dir.join("trace.json")).unwrap()).unwrap();
+    let (phases, wall_us) = obs::report::phase_breakdown(&trace).unwrap();
+    assert!(wall_us > 0.0);
+    for want in ["train/step", "train/data", "train/dispatch", "exec/train", "train/eval"] {
+        assert!(
+            phases.iter().any(|p| p.name == want && p.count > 0),
+            "phase {want} missing from trace; got {:?}",
+            phases.iter().map(|p| p.name.as_str()).collect::<Vec<_>>()
+        );
+    }
+
+    // log.jsonl eval records carry the quantizer-health fields.
+    let evals: Vec<Json> = read_jsonl_lines(&run_dir.join("log.jsonl"))
+        .into_iter()
+        .filter(|j| j.get("eval_loss").is_some())
+        .collect();
+    assert!(!evals.is_empty(), "no eval records in log.jsonl");
+    for e in &evals {
+        assert!(e.get("quant_clip_rate").is_some(), "missing quant_clip_rate");
+        assert!(e.get("quant_grad_var").is_some(), "missing quant_grad_var");
+    }
+
+    // metrics.jsonl holds at least two registry snapshots.
+    let snaps = read_jsonl_lines(&run_dir.join("metrics.jsonl"));
+    assert!(snaps.len() >= 2, "expected >= 2 snapshots, got {}", snaps.len());
+    assert!(snaps.iter().all(|s| s.get("counters").is_some()));
+
+    // And the whole directory renders as a markdown report.
+    let md = obs::report::render_run_report(&run_dir).unwrap();
+    assert!(md.contains("Per-phase time breakdown"), "{md}");
+    assert!(md.contains("Quantizer health"), "{md}");
+    assert!(md.contains("train/step"), "{md}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn divergence_is_recorded_in_report_and_jsonl() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_enabled(true);
+    let (dir, reg, rt) = setup("diverge");
+    let mut cfg = base_cfg(&dir, "qat", 20);
+    cfg.lr = 1e8;
+    cfg.schedule = "constant".into();
+    cfg.warmup_frac = 0.0;
+    let run_dir = PathBuf::from(&cfg.out_dir).join(cfg.run_name());
+    let mut tr = Trainer::new(&rt, &reg, cfg).unwrap();
+    let report = tr.train().unwrap();
+
+    assert!(report.diverged, "lr=1e8 should diverge");
+    let at = report.diverged_at_step.expect("diverged_at_step set");
+    assert!(at < 20, "diverged_at_step {at} out of range");
+
+    let diverged_lines: Vec<Json> = read_jsonl_lines(&run_dir.join("log.jsonl"))
+        .into_iter()
+        .filter(|j| j.get("diverged_at_step").is_some())
+        .collect();
+    assert_eq!(diverged_lines.len(), 1, "expected exactly one divergence record");
+    assert_eq!(
+        diverged_lines[0].get("diverged_at_step").and_then(Json::as_f64),
+        Some(at as f64)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
