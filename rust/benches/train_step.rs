@@ -12,9 +12,10 @@
 //! Run: `cargo bench --bench train_step`
 
 use statquant::config::TrainConfig;
-use statquant::coordinator::Trainer;
+use statquant::coordinator::{make_dataset, DataParallel, ReduceMode, Schedule, Trainer};
 use statquant::data::Dataset;
-use statquant::runtime::{Registry, Runtime};
+use statquant::quant::GradQuantizer;
+use statquant::runtime::{Registry, Runtime, StepKind};
 use statquant::util::bench::Bench;
 
 fn main() {
@@ -84,6 +85,87 @@ fn main() {
             });
         }
     }
+    bench_data_parallel(&mut b, &rt, &reg);
     b.finish("train_step").expect("bench artifacts");
     println!("\nwrote results/bench/train_step.csv + BENCH_train_step.json");
+}
+
+/// Serial vs threaded data-parallel engine (ISSUE 8 acceptance): 4-worker
+/// PSQ training, dense serial vs ring serial vs ring on a pool sized to
+/// the machine. Each iteration runs a fixed number of full dp steps, so
+/// units/s is directly steps/s. The derived `dp_ring_speedup` gauge
+/// (threaded-ring vs serial-dense median) lands in BENCH_train_step.json;
+/// the >= 1.8x criterion is meaningful only on a >= 4-core runner — on
+/// fewer cores the pool degrades to roughly serial throughput.
+fn bench_data_parallel(b: &mut Bench, rt: &Runtime, reg: &Registry) {
+    const WORKERS: usize = 4;
+    const STEPS_PER_ITER: u64 = 4;
+    let meta = match reg.meta("mlp", "psq", StepKind::Probe) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skip dp bench: {e}");
+            return;
+        }
+    };
+    let probe = match rt.executor(meta) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("skip dp bench: {e}");
+            return;
+        }
+    };
+    let cfg = TrainConfig {
+        model: "mlp".into(),
+        variant: "psq".into(),
+        ..TrainConfig::default()
+    };
+    let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
+    let init = reg.init_params("mlp").expect("init params");
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let pool = cores.min(WORKERS);
+
+    let mut run_dp = |name: &str, mode: ReduceMode, threads: usize| {
+        let dp = DataParallel {
+            probe: &probe,
+            workers: WORKERS,
+            allreduce_bits: 4.0,
+            quantizer: GradQuantizer::Psq,
+            momentum: 0.9,
+            threads,
+            mode,
+        };
+        let mut step_base = 0u64;
+        b.run(name, STEPS_PER_ITER as f64, || {
+            let mut params = init.clone();
+            dp.train(
+                dataset.as_ref(),
+                &mut params,
+                STEPS_PER_ITER,
+                0.05,
+                Schedule::Constant,
+                0,
+                5.0,
+                step_base, // vary the seed so iterations don't share caches
+            )
+            .expect("dp step");
+            step_base += 1;
+            std::hint::black_box(&params);
+        })
+        .median_ns
+    };
+
+    let serial = run_dp("dp/serial_dense_w4", ReduceMode::Dense, 1);
+    run_dp("dp/ring_serial_w4", ReduceMode::Ring, 1);
+    let threaded = run_dp(&format!("dp/ring_t{pool}_w4"), ReduceMode::Ring, pool);
+    let speedup = serial / threaded.max(1.0);
+    println!("dp ring speedup (threaded vs serial dense): {speedup:.2}x on {cores} core(s)");
+    statquant::obs::metrics()
+        .gauge(
+            "dp_ring_speedup",
+            "threaded ring dp speedup over serial dense (median, 4 workers)",
+        )
+        .set(speedup);
+    statquant::obs::metrics()
+        .gauge("dp_bench_cores", "available_parallelism during dp bench")
+        .set(cores as f64);
 }

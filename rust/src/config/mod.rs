@@ -30,6 +30,13 @@ pub struct TrainConfig {
     pub workers: usize,
     /// Bitwidth for the quantized gradient all-reduce (0 = fp32 reduce).
     pub allreduce_bits: f32,
+    /// Quantizer for the all-reduce payloads (ptq|psq|bhq|fp8|bfp).
+    pub allreduce_quant: String,
+    /// Pool width for the threaded ring engine (1 = serial; results are
+    /// bitwise identical for any value, see coordinator/data_parallel).
+    pub dp_threads: usize,
+    /// How worker gradients are combined: "dense" | "ring".
+    pub dp_mode: String,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -69,6 +76,9 @@ impl Default for TrainConfig {
             out_dir: "runs".into(),
             workers: 1,
             allreduce_bits: 0.0,
+            allreduce_quant: "psq".into(),
+            dp_threads: 1,
+            dp_mode: "dense".into(),
         }
     }
 }
@@ -126,6 +136,15 @@ impl TrainConfig {
         if let Some(v) = get_f("train.allreduce_bits") {
             self.allreduce_bits = v as f32;
         }
+        if let Some(v) = get_s("train.allreduce_quant") {
+            self.allreduce_quant = v;
+        }
+        if let Some(v) = get_f("train.dp_threads") {
+            self.dp_threads = v as usize;
+        }
+        if let Some(v) = get_s("train.dp_mode") {
+            self.dp_mode = v;
+        }
         if let Some(v) = get_s("data.kind") {
             self.data.kind = v;
         }
@@ -166,6 +185,9 @@ impl TrainConfig {
             "train.seed" | "seed" => self.seed = val.parse()?,
             "train.workers" | "workers" => self.workers = val.parse()?,
             "train.allreduce_bits" => self.allreduce_bits = val.parse()?,
+            "train.allreduce_quant" => self.allreduce_quant = val.into(),
+            "train.dp_threads" | "dp_threads" => self.dp_threads = val.parse()?,
+            "train.dp_mode" | "dp_mode" => self.dp_mode = val.into(),
             "data.kind" => self.data.kind = val.into(),
             "data.noise" => self.data.noise = val.parse()?,
             "data.hard_frac" => self.data.hard_frac = val.parse()?,
@@ -186,6 +208,15 @@ impl TrainConfig {
         }
         if self.workers == 0 {
             bail!("workers must be >= 1");
+        }
+        if self.dp_threads == 0 {
+            bail!("dp_threads must be >= 1");
+        }
+        if !["dense", "ring"].contains(&self.dp_mode.as_str()) {
+            bail!("unknown dp_mode {:?} (expected dense|ring)", self.dp_mode);
+        }
+        if crate::quant::GradQuantizer::from_name(&self.allreduce_quant).is_none() {
+            bail!("unknown allreduce_quant {:?}", self.allreduce_quant);
         }
         if !["cosine", "constant", "step"].contains(&self.schedule.as_str()) {
             bail!("unknown schedule {:?}", self.schedule);
@@ -252,6 +283,30 @@ mod tests {
         let mut c = TrainConfig::default();
         c.workers = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dp_engine_keys_roundtrip_and_validate() {
+        let mut c = TrainConfig::default();
+        c.set("dp_mode=ring").unwrap();
+        c.set("dp_threads=4").unwrap();
+        c.set("train.allreduce_quant=bhq").unwrap();
+        assert_eq!(c.dp_mode, "ring");
+        assert_eq!(c.dp_threads, 4);
+        assert_eq!(c.allreduce_quant, "bhq");
+        c.validate().unwrap();
+        c.dp_mode = "mesh".into();
+        assert!(c.validate().is_err());
+        c.dp_mode = "ring".into();
+        c.allreduce_quant = "int3".into();
+        assert!(c.validate().is_err());
+        c.allreduce_quant = "psq".into();
+        c.dp_threads = 0;
+        assert!(c.validate().is_err());
+
+        let j = toml::parse("[train]\ndp_mode = \"ring\"\ndp_threads = 2\n").unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!((c.dp_mode.as_str(), c.dp_threads), ("ring", 2));
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod lr;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
-pub use data_parallel::DataParallel;
+pub use data_parallel::{DataParallel, ReduceMode};
 pub use lr::Schedule;
-pub use trainer::{make_dataset, TrainReport, Trainer};
+pub use trainer::{make_dataset, train_data_parallel, TrainReport, Trainer};

@@ -9,10 +9,13 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use super::checkpoint::Checkpoint;
+use super::data_parallel::{DataParallel, ReduceMode};
 use super::lr::Schedule;
 use crate::config::TrainConfig;
+use crate::quant::GradQuantizer;
 use crate::data::markov::{Markov, MarkovConfig};
 use crate::data::synthimg::{SynthImg, SynthImgConfig};
 use crate::data::Dataset;
@@ -67,6 +70,127 @@ pub fn make_dataset(cfg: &TrainConfig, meta_input: &[usize], kind_hint: &str) ->
             seed: cfg.data.seed,
         }))
     }
+}
+
+/// Drive the data-parallel engine (dense or threaded ring) for a full
+/// run. The per-worker probe artifact replaces the fused train step —
+/// the update runs in Rust so the gradients can pass through the
+/// all-reduce quantizer — while eval still uses the fused eval
+/// artifact. The run dir receives the same artifact set as
+/// [`Trainer::train`] (log.jsonl, curve.csv, metrics.prom, trace.json,
+/// final checkpoint), reconstructed post hoc because the threaded pool
+/// owns the step loop.
+pub fn train_data_parallel(rt: &Runtime, reg: &Registry, cfg: TrainConfig) -> Result<TrainReport> {
+    cfg.validate()?;
+    let probe_meta = reg.meta(&cfg.model, &cfg.variant, StepKind::Probe)?;
+    let eval_meta = reg.meta(&cfg.model, "qat", StepKind::Eval)?;
+    let probe = rt.executor(probe_meta)?;
+    let eval_exec = rt.executor(eval_meta)?;
+    let mut params = reg.init_params(&cfg.model)?;
+    let mut velocity = vec![0.0f32; params.len()];
+    let kind_hint = if cfg.model == "transformer" {
+        "markov"
+    } else {
+        "synthimg"
+    };
+    let dataset = make_dataset(&cfg, &probe_meta.input_shape, kind_hint);
+    let quantizer = GradQuantizer::from_name(&cfg.allreduce_quant)
+        .ok_or_else(|| anyhow!("unknown allreduce_quant {:?}", cfg.allreduce_quant))?;
+    let mode = ReduceMode::from_name(&cfg.dp_mode)
+        .ok_or_else(|| anyhow!("unknown dp_mode {:?}", cfg.dp_mode))?;
+    let dp = DataParallel {
+        probe: &probe,
+        workers: cfg.workers,
+        allreduce_bits: cfg.allreduce_bits,
+        quantizer,
+        momentum: 0.9, // paper Appendix E, as in the fused artifacts
+        threads: cfg.dp_threads,
+        mode,
+    };
+    let schedule = Schedule::from_name(&cfg.schedule).context("unknown schedule")?;
+    let warmup = (cfg.steps as f64 * cfg.warmup_frac) as u64;
+    let out_dir = PathBuf::from(&cfg.out_dir).join(cfg.run_name());
+    std::fs::create_dir_all(&out_dir)?;
+
+    let t0 = Instant::now();
+    let hist = dp.train_with_state(
+        dataset.as_ref(),
+        &mut params,
+        &mut velocity,
+        cfg.steps,
+        cfg.lr,
+        schedule,
+        warmup,
+        cfg.bits,
+        cfg.seed,
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut csv = CsvWriter::create(
+        out_dir.join("curve.csv"),
+        &["step", "lr", "train_loss", "grad_norm_sq"],
+    )?;
+    let mut curve = Vec::with_capacity(hist.len());
+    let mut diverged_at_step = None;
+    for (step, s) in hist.iter().enumerate() {
+        let lr = schedule.lr(cfg.lr, step as u64, cfg.steps, warmup);
+        csv.rowf(&[step as f64, lr, s.loss, s.grad_norm_sq])?;
+        if diverged_at_step.is_none() && (!s.loss.is_finite() || s.loss > 1e4) {
+            diverged_at_step = Some(step as u64);
+        }
+        curve.push((step as u64, s.loss));
+    }
+    let diverged = diverged_at_step.is_some();
+    let (el, ea) = if diverged {
+        (f64::NAN, 0.0)
+    } else {
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for i in 0..cfg.eval_batches {
+            let b = dataset.eval_batch(i);
+            let out = eval_exec.run(&[HostTensor::F32(params.clone()), b.x, b.y])?;
+            loss += f64::from(out[0].as_f32()?[0]);
+            acc += f64::from(out[1].as_f32()?[0]);
+        }
+        let n = cfg.eval_batches.max(1) as f64;
+        (loss / n, acc / n)
+    };
+    let final_train_loss = hist.last().map_or(f64::NAN, |s| s.loss);
+    let mut jsonl = JsonlWriter::create(out_dir.join("log.jsonl"))?;
+    jsonl.write(&obj([
+        ("mode", Json::from(mode.name())),
+        ("workers", Json::from(cfg.workers)),
+        ("dp_threads", Json::from(cfg.dp_threads)),
+        ("allreduce_bits", Json::from(f64::from(cfg.allreduce_bits))),
+        ("steps", Json::from(hist.len())),
+        ("final_train_loss", finite_or_null(final_train_loss)),
+        ("eval_loss", finite_or_null(el)),
+        ("eval_acc", Json::from(ea)),
+    ]))?;
+    if obs::enabled() {
+        let m = obs::metrics();
+        std::fs::write(out_dir.join("metrics.prom"), m.render_prometheus())?;
+        obs::span::write_chrome_trace(&out_dir.join("trace.json"))?;
+    }
+    Checkpoint {
+        step: hist.len() as u64,
+        params: params.clone(),
+        momentum: velocity,
+    }
+    .save(&out_dir)?;
+    Ok(TrainReport {
+        run_name: cfg.run_name(),
+        steps: hist.len() as u64,
+        final_train_loss,
+        final_eval_loss: el,
+        final_eval_acc: ea,
+        diverged,
+        diverged_at_step,
+        wall_seconds: wall,
+        steps_per_second: hist.len() as f64 / wall.max(1e-9),
+        curve,
+        params,
+    })
 }
 
 pub struct Trainer {

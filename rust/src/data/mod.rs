@@ -20,7 +20,11 @@ pub struct Batch {
 }
 
 /// A deterministic, infinitely iterable synthetic dataset.
-pub trait Dataset {
+///
+/// `Send + Sync` (implementations hold only precomputed tables): the
+/// data-parallel pool reads batches from many threads, keyed purely by
+/// the step index.
+pub trait Dataset: Send + Sync {
     /// Deterministic batch for a global step index (same step -> same
     /// batch, across runs and workers).
     fn batch(&self, step: u64) -> Batch;

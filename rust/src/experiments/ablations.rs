@@ -4,7 +4,7 @@ use anyhow::Result;
 
 use super::common::{base_config, out_dir, warm_params};
 use crate::coordinator::trainer::make_dataset;
-use crate::coordinator::{DataParallel, Schedule};
+use crate::coordinator::{DataParallel, ReduceMode, Schedule};
 use crate::metrics::{fmt_sig, CsvWriter, MarkdownTable};
 use crate::quant::bhq::{self, Proxy};
 use crate::quant::{GradQuantizer, Mat};
@@ -107,9 +107,11 @@ pub fn bifurcation_note() -> Result<()> {
     Ok(())
 }
 
-/// Data-parallel quantized all-reduce: convergence vs all-reduce bits.
-/// Workers' gradients form a (W, P) matrix quantized per-row — PSQ/BHQ
-/// across *workers* — before averaging (DESIGN.md S12).
+/// Data-parallel quantized all-reduce: convergence vs all-reduce bits,
+/// dense vs ring. Dense quantizes the (W, P) matrix per-row — PSQ/BHQ
+/// across *workers*; ring quantizes per-(worker, segment) payloads with
+/// triple-keyed SR seeds (DESIGN.md S12). The serial-vs-ring comparison
+/// in EXPERIMENTS.md comes from this table.
 pub fn allreduce(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
     let mut cfg = base_config(args, reg);
     if args.flag("model").is_none() {
@@ -117,6 +119,7 @@ pub fn allreduce(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
     }
     let workers: usize = args.flag_parse("workers")?.unwrap_or(4);
     let steps: u64 = args.flag_parse("dp-steps")?.unwrap_or(150);
+    let threads: usize = args.flag_parse("dp-threads")?.unwrap_or(1);
     let quant = args.flag("quant").unwrap_or("psq");
     let q = GradQuantizer::from_name(quant)
         .ok_or_else(|| anyhow::anyhow!("unknown quantizer {quant}"))?;
@@ -129,44 +132,58 @@ pub fn allreduce(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
     let dir = out_dir(args);
     let mut csv = CsvWriter::create(
         dir.join("ablate_allreduce.csv"),
-        &["allreduce_bits", "final_loss", "mean_last10"],
+        &["mode", "allreduce_bits", "final_loss", "mean_last10"],
     )?;
-    let mut table = MarkdownTable::new(&["all-reduce", "final loss", "mean(last 10)"]);
-    for bits in [0.0f32, 4.0, 6.0, 8.0] {
-        let dp = DataParallel {
-            probe: &exec,
-            workers,
-            allreduce_bits: bits,
-            quantizer: q,
-            momentum: 0.9,
-        };
-        let mut params = reg.init_params(&cfg.model)?;
-        let hist = dp.train(
-            dataset.as_ref(),
-            &mut params,
-            steps,
-            cfg.lr,
-            Schedule::Cosine,
-            steps / 20,
-            8.0,
-            cfg.seed,
-        )?;
-        let final_loss = hist.last().map(|s| s.loss).unwrap_or(f64::NAN);
-        let tail: Vec<f64> = hist.iter().rev().take(10).map(|s| s.loss).collect();
-        let mean_tail = tail.iter().sum::<f64>() / tail.len().max(1) as f64;
-        let label = if bits == 0.0 {
-            "fp32".to_string()
-        } else {
-            format!("{quant}@{bits}b")
-        };
-        println!("{label}: final loss {final_loss:.4}, tail mean {mean_tail:.4}");
-        table.row(vec![
-            label,
-            format!("{final_loss:.4}"),
-            format!("{mean_tail:.4}"),
-        ]);
-        csv.rowf(&[f64::from(bits), final_loss, mean_tail])?;
+    let mut table = MarkdownTable::new(&["mode", "all-reduce", "final loss", "mean(last 10)"]);
+    for mode in [ReduceMode::Dense, ReduceMode::Ring] {
+        for bits in [0.0f32, 4.0, 6.0, 8.0] {
+            let dp = DataParallel {
+                probe: &exec,
+                workers,
+                allreduce_bits: bits,
+                quantizer: q,
+                momentum: 0.9,
+                threads: if mode == ReduceMode::Ring { threads } else { 1 },
+                mode,
+            };
+            let mut params = reg.init_params(&cfg.model)?;
+            let hist = dp.train(
+                dataset.as_ref(),
+                &mut params,
+                steps,
+                cfg.lr,
+                Schedule::Cosine,
+                steps / 20,
+                8.0,
+                cfg.seed,
+            )?;
+            let final_loss = hist.last().map(|s| s.loss).unwrap_or(f64::NAN);
+            let tail: Vec<f64> = hist.iter().rev().take(10).map(|s| s.loss).collect();
+            let mean_tail = tail.iter().sum::<f64>() / tail.len().max(1) as f64;
+            let label = if bits == 0.0 {
+                "fp32".to_string()
+            } else {
+                format!("{quant}@{bits}b")
+            };
+            println!(
+                "{} {label}: final loss {final_loss:.4}, tail mean {mean_tail:.4}",
+                mode.name()
+            );
+            table.row(vec![
+                mode.name().into(),
+                label,
+                format!("{final_loss:.4}"),
+                format!("{mean_tail:.4}"),
+            ]);
+            csv.row(&[
+                mode.name().to_string(),
+                format!("{bits}"),
+                format!("{final_loss}"),
+                format!("{mean_tail}"),
+            ])?;
+        }
     }
     println!("\n{}", table.render());
+    std::fs::write(dir.join("ablate_allreduce.md"), table.render())?;
     Ok(())
 }

@@ -37,6 +37,8 @@ fn usage() -> &'static str {
     "usage: statquant <train|eval|probe|exp|list|trace-report> [options]\n\
      \n\
      train [config.toml] [--artifacts DIR] [--set key=value ...]\n\
+     \x20     [--dp-threads N] [--dp-mode dense|ring]   data-parallel engine\n\
+     \x20     (runs when train.workers > 1; see train.allreduce_bits/_quant)\n\
      eval  --model M [--artifacts DIR] [--ckpt ckpt_xxx.json] [--batches N]\n\
      probe --model M --variant Q [--bits 4,5,6] [--seeds K] [--warm N]\n\
      exp   <fig3a|fig3bc|fig4|fig5|table1|table2|thm1|ablate-*> [flags]\n\
@@ -113,11 +115,48 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     for kv in args.flag_all("set") {
         cfg.set(kv)?;
     }
+    // dp-engine sugar over --set train.dp_*
+    if let Some(v) = args.flag_parse::<usize>("dp-threads")? {
+        cfg.dp_threads = v;
+    }
+    if let Some(v) = args.flag("dp-mode") {
+        cfg.dp_mode = v.to_string();
+    }
     args.check_unknown()?;
     cfg.validate()?;
 
     let rt = Runtime::cpu()?;
     let reg = Registry::open(&cfg.artifacts_dir)?;
+    if cfg.workers > 1 {
+        println!(
+            "[train] data-parallel {} on {}: {} workers x {} threads, {} reduce ({} @ {} bits)",
+            cfg.variant,
+            cfg.model,
+            cfg.workers,
+            cfg.dp_threads,
+            cfg.dp_mode,
+            cfg.allreduce_quant,
+            cfg.allreduce_bits
+        );
+        let report = statquant::coordinator::train_data_parallel(&rt, &reg, cfg.clone())?;
+        println!(
+            "[train] done: {} steps in {:.1}s ({:.2} steps/s)\n\
+             [train] train loss {:.4}, eval loss {:.4}, eval acc {:.4}{}\n\
+             [train] run dir -> {}",
+            report.steps,
+            report.wall_seconds,
+            report.steps_per_second,
+            report.final_train_loss,
+            report.final_eval_loss,
+            report.final_eval_acc,
+            match report.diverged_at_step {
+                Some(s) => format!(" (DIVERGED at step {s})"),
+                None => String::new(),
+            },
+            Path::new(&cfg.out_dir).join(cfg.run_name()).display()
+        );
+        return Ok(());
+    }
     println!(
         "[train] {} on {} ({} steps, lr {}, {} bits)",
         cfg.variant, cfg.model, cfg.steps, cfg.lr, cfg.bits

@@ -11,7 +11,9 @@
 //! - metrics: `snake_case`, counters end in `_total`, durations in
 //!   `_seconds`; labels via [`registry::labeled`]
 //!   (`executor_dispatch_total{backend="native",step="train"}`).
-//! - spans: `area/phase` (`train/step`, `exec/train`, `dp/allreduce_quant`).
+//! - spans: `area/phase` (`train/step`, `exec/train`, `dp/allreduce_quant`,
+//!   and the ring all-reduce phases `ring/{step,worker_grad,quantize,
+//!   reduce_scatter,all_gather}` from the threaded data-parallel engine).
 
 pub mod quant;
 pub mod registry;

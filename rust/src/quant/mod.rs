@@ -19,6 +19,7 @@ pub mod bhq;
 pub mod fp8;
 pub mod psq;
 pub mod ptq;
+pub mod segment;
 pub mod sr;
 pub mod tensor;
 
@@ -104,6 +105,23 @@ pub struct QuantStats {
     /// Exact SR variance sum p(1-p)/scale^2 (Thm-1 noise term), computed
     /// only on sampled calls.
     pub sr_variance: Option<f64>,
+}
+
+impl QuantStats {
+    /// Fold another call's stats into this one (counts add; the exact
+    /// variance sums when both sides sampled it, else keeps whichever
+    /// side has one). Used by the segment path, which quantizes one
+    /// logical payload as several reshaped blocks.
+    pub fn merge(&mut self, other: &QuantStats) {
+        self.values += other.values;
+        self.clipped += other.clipped;
+        self.zero_codes += other.zero_codes;
+        self.poisoned_rows += other.poisoned_rows;
+        self.sr_variance = match (self.sr_variance, other.sr_variance) {
+            (Some(a), Some(b)) => Some(a + b),
+            (a, b) => a.or(b),
+        };
+    }
 }
 
 /// Output of an affine quantizer: integer codes, dequantized values, and

@@ -1,0 +1,178 @@
+//! Segment/chunk quantization over flat slices (S12): the ring
+//! all-reduce payload path.
+//!
+//! A worker's outgoing ring segment is a flat f32 run with no sample
+//! structure, so it is reshaped into `chunk`-wide rows before entering
+//! the paper stack — PSQ then yields per-chunk scales and BHQ gets a
+//! block structure to mix — and flattened back after dequantization. A
+//! ragged tail shorter than `chunk` is quantized as its own short row,
+//! which only changes that tail's scale statistics, never unbiasedness
+//! (Thm 1 holds per matrix).
+
+use super::{bfp, bhq, fp8, nbins, psq, ptq, GradQuantizer, Mat, QuantStats};
+use crate::util::rng::Pcg32;
+
+/// Quantize-dequantize a flat slice at `bits`, reshaped into rows of
+/// `chunk` elements. Telemetry is recorded into the quantizer's
+/// `obs::quant` sink exactly like the whole-matrix path; the RNG draw
+/// order depends only on the input and `chunk`, never on the sampling
+/// cadence, so determinism-given-seed is unaffected.
+pub fn quantize_slice(
+    q: GradQuantizer,
+    xs: &[f32],
+    bits: f32,
+    chunk: usize,
+    rng: &mut Pcg32,
+) -> (Vec<f32>, QuantStats) {
+    if bits <= 0.0 || xs.is_empty() {
+        return (xs.to_vec(), QuantStats::default());
+    }
+    let chunk = chunk.max(1);
+    let nb = nbins(bits);
+    let tel = crate::obs::quant::by_name(q.name());
+    let sample = tel.is_some_and(|t| t.should_sample());
+    let body_rows = xs.len() / chunk;
+    let tail = xs.len() - body_rows * chunk;
+    let mut out = Vec::with_capacity(xs.len());
+    let mut st = QuantStats::default();
+    if body_rows > 0 {
+        let m = Mat::from_vec(body_rows, chunk, xs[..body_rows * chunk].to_vec());
+        let (deq, s) = apply_stats(q, &m, nb, rng, sample);
+        out.extend_from_slice(&deq.data);
+        st.merge(&s);
+    }
+    if tail > 0 {
+        let m = Mat::from_vec(1, tail, xs[body_rows * chunk..].to_vec());
+        let (deq, s) = apply_stats(q, &m, nb, rng, sample);
+        out.extend_from_slice(&deq.data);
+        st.merge(&s);
+    }
+    if let Some(t) = tel {
+        t.record(&st);
+    }
+    (out, st)
+}
+
+/// Stats-aware quantize-dequantize dispatch over one reshaped block.
+/// The Table-2 formats (fp8/bfp) have no stats path; they report only
+/// the value count.
+fn apply_stats(
+    q: GradQuantizer,
+    x: &Mat,
+    nb: f32,
+    rng: &mut Pcg32,
+    sample: bool,
+) -> (Mat, QuantStats) {
+    match q {
+        GradQuantizer::Ptq => {
+            let (o, st) = ptq::quantize_stats(x, nb, rng, sample);
+            (o.deq, st)
+        }
+        GradQuantizer::Psq => {
+            let (o, st) = psq::quantize_stats(x, nb, rng, sample);
+            (o.deq, st)
+        }
+        GradQuantizer::Bhq => {
+            let (o, st) = bhq::quantize_stats(x, nb, rng, bhq::Proxy::Extended, sample);
+            (o.deq, st)
+        }
+        GradQuantizer::Fp8 => (
+            fp8::quantize(x, rng),
+            QuantStats {
+                values: x.len() as u64,
+                ..QuantStats::default()
+            },
+        ),
+        GradQuantizer::Bfp => (
+            bfp::quantize(x, nb, 64, rng),
+            QuantStats {
+                values: x.len() as u64,
+                ..QuantStats::default()
+            },
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noise(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 0);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn zero_bits_is_identity() {
+        let xs = noise(100, 1);
+        let mut rng = Pcg32::new(2, 0);
+        let (out, st) = quantize_slice(GradQuantizer::Psq, &xs, 0.0, 16, &mut rng);
+        assert_eq!(out, xs);
+        assert_eq!(st, QuantStats::default());
+    }
+
+    /// When `chunk` divides the slice, the segment path is bitwise the
+    /// whole-matrix quantizer on the reshaped input (same RNG draws).
+    #[test]
+    fn divisible_slice_matches_whole_matrix_path() {
+        let xs = noise(96, 3);
+        for q in GradQuantizer::PAPER {
+            let (out, _) = quantize_slice(q, &xs, 4.0, 32, &mut Pcg32::new(7, 9));
+            let m = Mat::from_vec(3, 32, xs.clone());
+            let whole = q.apply(&m, 4.0, &mut Pcg32::new(7, 9));
+            assert_eq!(out, whole.data, "{q:?}");
+        }
+    }
+
+    /// Ragged tails keep length, stay finite, and stay within one bin of
+    /// the input for the affine quantizers.
+    #[test]
+    fn ragged_tail_quantizes_cleanly() {
+        for (n, chunk) in [(37usize, 16usize), (5, 16), (16, 16), (130, 64)] {
+            let xs = noise(n, n as u64);
+            for q in GradQuantizer::ALL {
+                let (out, st) =
+                    quantize_slice(q, &xs, 5.0, chunk, &mut Pcg32::new(11, 4));
+                assert_eq!(out.len(), n, "{q:?} n={n}");
+                assert!(out.iter().all(|v| v.is_finite()), "{q:?} n={n}");
+                if GradQuantizer::PAPER.contains(&q) {
+                    assert_eq!(st.values, n as u64, "{q:?} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_bitwise() {
+        let xs = noise(77, 13);
+        let (a, _) = quantize_slice(GradQuantizer::Bhq, &xs, 3.0, 16, &mut Pcg32::new(5, 5));
+        let (b, _) = quantize_slice(GradQuantizer::Bhq, &xs, 3.0, 16, &mut Pcg32::new(5, 5));
+        assert_eq!(a, b);
+        let (c, _) = quantize_slice(GradQuantizer::Bhq, &xs, 3.0, 16, &mut Pcg32::new(6, 5));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let a = QuantStats {
+            values: 10,
+            clipped: 1,
+            zero_codes: 2,
+            poisoned_rows: 0,
+            sr_variance: Some(0.5),
+        };
+        let mut b = QuantStats {
+            values: 5,
+            clipped: 0,
+            zero_codes: 1,
+            poisoned_rows: 1,
+            sr_variance: None,
+        };
+        b.merge(&a);
+        assert_eq!(b.values, 15);
+        assert_eq!(b.clipped, 1);
+        assert_eq!(b.zero_codes, 3);
+        assert_eq!(b.poisoned_rows, 1);
+        assert_eq!(b.sr_variance, Some(0.5));
+    }
+}

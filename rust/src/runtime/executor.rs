@@ -53,7 +53,11 @@ pub type StepOutputs = Vec<HostTensor>;
 /// the facade has already validated against `meta.inputs` and must
 /// return outputs in `meta.outputs` order (the facade re-checks arity
 /// and numel on the way out).
-pub trait ExecutorBackend {
+///
+/// `Send + Sync` so one `Executor` can be dispatched concurrently from
+/// the data-parallel worker pool: `execute` takes `&self` and carries
+/// all per-call state in its arguments.
+pub trait ExecutorBackend: Send + Sync {
     /// Short backend identifier for logs ("native", "pjrt", ...).
     fn name(&self) -> &'static str;
 

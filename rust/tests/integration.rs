@@ -232,6 +232,8 @@ fn data_parallel_quantized_allreduce_trains() {
         allreduce_bits: 6.0,
         quantizer: GradQuantizer::Psq,
         momentum: 0.9,
+        threads: 1,
+        mode: statquant::coordinator::ReduceMode::Dense,
     };
     let mut params = reg.init_params("mlp").unwrap();
     let hist = dp

@@ -7,7 +7,7 @@
 use std::path::{Path, PathBuf};
 
 use statquant::config::TrainConfig;
-use statquant::coordinator::{make_dataset, Checkpoint, DataParallel, Schedule, Trainer};
+use statquant::coordinator::{make_dataset, Checkpoint, DataParallel, ReduceMode, Schedule, Trainer};
 use statquant::quant::GradQuantizer;
 use statquant::runtime::{native, MlpSpec, Registry, Runtime, StepKind};
 
@@ -98,6 +98,8 @@ fn data_parallel_quantized_allreduce_trains() {
         allreduce_bits: 8.0,
         quantizer: GradQuantizer::Psq,
         momentum: 0.9,
+        threads: 1,
+        mode: ReduceMode::Dense,
     };
     let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
     let init = reg.init_params("mlp").unwrap();
@@ -120,6 +122,171 @@ fn data_parallel_quantized_allreduce_trains() {
     let first = steps[0].loss;
     let last = steps.last().unwrap().loss;
     assert!(last < first, "dp loss did not decrease: {first} -> {last}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The ring engine's determinism contract (ISSUE 8): for a fixed config
+/// + seed, the final parameters are bitwise identical whether the ring
+/// schedule runs serially or on a pool of `workers` threads — SR noise
+/// is keyed per (step, worker, segment) and every reduction order is
+/// fixed by index, never by scheduling.
+#[test]
+fn ring_allreduce_bitwise_deterministic_across_thread_counts() {
+    let (dir, reg, rt) = setup("ringdet");
+    let meta = reg.meta("mlp", "psq", StepKind::Probe).unwrap();
+    let probe = rt.executor(meta).unwrap();
+    let cfg = base_cfg(&dir, "psq", 0);
+    let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
+    for quantizer in [GradQuantizer::Psq, GradQuantizer::Bhq] {
+        for workers in [1usize, 2, 4] {
+            let run = |threads: usize| {
+                let dp = DataParallel {
+                    probe: &probe,
+                    workers,
+                    allreduce_bits: 4.0,
+                    quantizer,
+                    momentum: 0.9,
+                    threads,
+                    mode: ReduceMode::Ring,
+                };
+                let mut params = reg.init_params("mlp").unwrap();
+                let hist = dp
+                    .train(
+                        dataset.as_ref(),
+                        &mut params,
+                        8,
+                        0.05,
+                        Schedule::Cosine,
+                        1,
+                        5.0,
+                        3,
+                    )
+                    .unwrap();
+                let losses: Vec<u64> = hist.iter().map(|s| s.loss.to_bits()).collect();
+                let bits: Vec<u32> = params.iter().map(|v| v.to_bits()).collect();
+                (bits, losses)
+            };
+            let serial = run(1);
+            let pooled = run(workers);
+            assert_eq!(
+                serial, pooled,
+                "{quantizer:?} workers={workers}: thread count changed the bits"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// At `allreduce_bits = 0` the ring all-reduce reproduces the dense fp32
+/// average *exactly* (the documented contract: canonical worker order
+/// with the same fused 1/W multiply), so dense and ring runs — serial or
+/// pooled — end in bitwise-identical parameters.
+#[test]
+fn ring_at_zero_bits_matches_dense_average_bitwise() {
+    let (dir, reg, rt) = setup("ringzero");
+    let meta = reg.meta("mlp", "qat", StepKind::Probe).unwrap();
+    let probe = rt.executor(meta).unwrap();
+    let cfg = base_cfg(&dir, "qat", 0);
+    let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
+    for workers in [2usize, 4, 5] {
+        let run = |mode: ReduceMode, threads: usize| {
+            let dp = DataParallel {
+                probe: &probe,
+                workers,
+                allreduce_bits: 0.0,
+                quantizer: GradQuantizer::Psq,
+                momentum: 0.9,
+                threads,
+                mode,
+            };
+            let mut params = reg.init_params("mlp").unwrap();
+            dp.train(
+                dataset.as_ref(),
+                &mut params,
+                6,
+                0.05,
+                Schedule::Constant,
+                0,
+                5.0,
+                9,
+            )
+            .unwrap();
+            params.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        };
+        let dense = run(ReduceMode::Dense, 1);
+        let ring_serial = run(ReduceMode::Ring, 1);
+        let ring_pooled = run(ReduceMode::Ring, workers);
+        assert_eq!(dense, ring_serial, "workers={workers} serial ring != dense");
+        assert_eq!(dense, ring_pooled, "workers={workers} pooled ring != dense");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Threaded ring training actually trains (loss decreases) and moves
+/// parameters, with quantized payloads on.
+#[test]
+fn ring_allreduce_threaded_trains() {
+    let (dir, reg, rt) = setup("ringtrain");
+    let meta = reg.meta("mlp", "psq", StepKind::Probe).unwrap();
+    let probe = rt.executor(meta).unwrap();
+    let cfg = base_cfg(&dir, "psq", 0);
+    let dataset = make_dataset(&cfg, &meta.input_shape, "synthimg");
+    let dp = DataParallel {
+        probe: &probe,
+        workers: 4,
+        allreduce_bits: 8.0,
+        quantizer: GradQuantizer::Psq,
+        momentum: 0.9,
+        threads: 4,
+        mode: ReduceMode::Ring,
+    };
+    let init = reg.init_params("mlp").unwrap();
+    let mut params = init.clone();
+    let steps = dp
+        .train(
+            dataset.as_ref(),
+            &mut params,
+            30,
+            0.05,
+            Schedule::Constant,
+            0,
+            5.0,
+            cfg.seed,
+        )
+        .unwrap();
+    assert_eq!(steps.len(), 30);
+    assert!(steps
+        .iter()
+        .all(|s| s.loss.is_finite() && s.grad_norm_sq > 0.0));
+    assert_ne!(params, init, "parameters never moved");
+    let first = steps[0].loss;
+    let last = steps.last().unwrap().loss;
+    assert!(last < first, "ring dp loss did not decrease: {first} -> {last}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `train_data_parallel` writes the full run-dir artifact set and its
+/// report round-trips through the ring engine.
+#[test]
+fn train_data_parallel_writes_run_artifacts() {
+    let (dir, reg, rt) = setup("dpdriver");
+    let mut cfg = base_cfg(&dir, "psq", 20);
+    cfg.workers = 4;
+    cfg.dp_threads = 2;
+    cfg.dp_mode = "ring".into();
+    cfg.allreduce_bits = 4.0;
+    let report = statquant::coordinator::train_data_parallel(&rt, &reg, cfg.clone()).unwrap();
+    assert_eq!(report.steps, 20);
+    assert!(!report.diverged);
+    assert!(report.final_eval_loss.is_finite());
+    let run_dir = Path::new(&cfg.out_dir).join(cfg.run_name());
+    for f in ["log.jsonl", "curve.csv"] {
+        assert!(run_dir.join(f).exists(), "missing {f}");
+    }
+    if statquant::obs::enabled() {
+        let trace = std::fs::read_to_string(run_dir.join("trace.json")).unwrap();
+        assert!(trace.contains("ring/"), "no ring/ spans in trace.json");
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 

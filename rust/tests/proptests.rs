@@ -323,6 +323,128 @@ fn prop_pcg_below_in_range() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Ring all-reduce invariants (ISSUE 8)
+// ---------------------------------------------------------------------------
+
+/// Segment-quantized ring reduce equals whole-matrix quantize-then-average
+/// *in expectation*: averaging many ring reductions (varying the step, so
+/// every (step, worker, segment) triple draws fresh SR noise) converges to
+/// the true per-element worker mean within a CLT band — for random worker
+/// counts, parameter sizes (hence random segment splits), and quantizers.
+#[test]
+fn prop_ring_reduce_unbiased_over_random_splits() {
+    use statquant::coordinator::data_parallel::ring_reduce;
+    check(10, |g| {
+        let workers = g.usize(2..=6);
+        let p = g.usize(8..=96);
+        let chunk = g.usize(1..=32);
+        let q = GradQuantizer::PAPER[g.usize(0..=GradQuantizer::PAPER.len() - 1)];
+        let mut grads = Mat::zeros(workers, p);
+        for w in 0..workers {
+            let scale = if w == 0 { 5.0 } else { g.f32(0.01..1.0) };
+            for v in grads.row_mut(w) {
+                *v = g.normal() * scale;
+            }
+        }
+        // true dense fp32 mean across workers
+        let mut truth = vec![0.0f64; p];
+        for w in 0..workers {
+            for (t, &v) in truth.iter_mut().zip(grads.row(w)) {
+                *t += f64::from(v) / workers as f64;
+            }
+        }
+        let reps = 600u64;
+        let mut sum = vec![0.0f64; p];
+        let mut sumsq = vec![0.0f64; p];
+        for rep in 0..reps {
+            let r = ring_reduce(&grads, q, 3.0, rep, chunk);
+            for (j, &v) in r.iter().enumerate() {
+                sum[j] += f64::from(v);
+                sumsq[j] += f64::from(v) * f64::from(v);
+            }
+        }
+        let kf = reps as f64;
+        // rare-bin-flip drift floor (same reasoning as the quantizer
+        // unbiasedness tests): a worker whose flip probability for an
+        // element is O(1/reps) may flip zero times, leaving up to
+        // ~bin/reps of undetectable mean shift with zero empirical SE.
+        // Bound the bin by the global range (x2 for BHQ's transformed
+        // space); the per-worker 1/W factors sum back out over workers.
+        let (lo, hi) = grads.minmax();
+        let floor = 12.0 * 2.0 * f64::from(hi - lo) / f64::from(nbins(3.0)) / kf + 1e-7;
+        for j in 0..p {
+            let mean = sum[j] / kf;
+            let var = (sumsq[j] / kf - mean * mean).max(0.0);
+            let se = (var / kf).sqrt();
+            let dev = (mean - truth[j]).abs();
+            if dev > 6.0 * se + floor {
+                return Err(format!(
+                    "{q:?} W={workers} p={p} chunk={chunk} elem {j}: \
+                     |E[ring] - mean| = {dev:.3e} > {:.3e}",
+                    6.0 * se + floor
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `segment_seed` never collides across random grids of
+/// (step, worker, segment) triples — the determinism contract requires
+/// every ring payload to draw from a distinct SR stream.
+#[test]
+fn prop_segment_seed_no_collisions() {
+    use statquant::coordinator::data_parallel::segment_seed;
+    use std::collections::HashMap;
+    check(20, |g| {
+        let steps: Vec<u64> = (0..g.usize(2..=12))
+            .map(|_| g.usize(0..=1_000_000) as u64)
+            .collect();
+        let workers = g.usize(1..=16);
+        let segments = g.usize(1..=16);
+        let mut seen: HashMap<u64, (u64, usize, usize)> = HashMap::new();
+        for &s in &steps {
+            for w in 0..workers {
+                for seg in 0..segments {
+                    if let Some(prev) = seen.insert(segment_seed(s, w, seg), (s, w, seg)) {
+                        if prev != (s, w, seg) {
+                            return Err(format!(
+                                "seed collision: {prev:?} vs {:?}",
+                                (s, w, seg)
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `seg_bounds` is always a contiguous, exhaustive partition of [0, p),
+/// with one (possibly empty) segment per worker.
+#[test]
+fn prop_seg_bounds_partition() {
+    use statquant::coordinator::data_parallel::seg_bounds;
+    check(100, |g| {
+        let p = g.usize(0..=4096);
+        let w = g.usize(1..=64);
+        let b = seg_bounds(p, w);
+        if b.len() != w {
+            return Err(format!("{} segments for {w} workers", b.len()));
+        }
+        let mut cursor = 0usize;
+        for &(lo, hi) in &b {
+            if lo != cursor || hi < lo {
+                return Err(format!("non-contiguous at ({lo},{hi}), cursor {cursor}"));
+            }
+            cursor = hi;
+        }
+        prop_assert(cursor == p, format!("covered {cursor} of {p}"))
+    });
+}
+
 /// Unbiasedness as a property: mean over many draws approaches the input
 /// for randomly structured matrices (all paper quantizers).
 #[test]
