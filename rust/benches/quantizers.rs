@@ -54,17 +54,72 @@ fn main() {
         });
 
         let mut rng = Pcg32::new(3, 3);
-        b.run(&format!("quantize/ptq {n}x{d}"), elems, || {
-            std::hint::black_box(ptq::quantize(&g, nb, &mut rng));
-        });
+        let ptq_ns = b
+            .run(&format!("quantize/ptq {n}x{d}"), elems, || {
+                std::hint::black_box(ptq::quantize(&g, nb, &mut rng));
+            })
+            .median_ns;
         let mut rng = Pcg32::new(3, 4);
-        b.run(&format!("quantize/psq {n}x{d}"), elems, || {
-            std::hint::black_box(psq::quantize(&g, nb, &mut rng));
-        });
+        let psq_ns = b
+            .run(&format!("quantize/psq {n}x{d}"), elems, || {
+                std::hint::black_box(psq::quantize(&g, nb, &mut rng));
+            })
+            .median_ns;
         let mut rng = Pcg32::new(3, 5);
-        b.run(&format!("quantize/bhq {n}x{d}"), elems, || {
-            std::hint::black_box(bhq::quantize(&g, nb, &mut rng));
-        });
+        let bhq_ns = b
+            .run(&format!("quantize/bhq {n}x{d}"), elems, || {
+                std::hint::black_box(bhq::quantize(&g, nb, &mut rng));
+            })
+            .median_ns;
+
+        // fused zero-allocation paths (same math + RNG stream as above;
+        // output buffer and BHQ plan scratch are reused across iterations)
+        let mut out = Mat::zeros(n, d);
+        let mut rng = Pcg32::new(3, 3);
+        let fused_ptq_ns = b
+            .run(&format!("fused/ptq {n}x{d}"), elems, || {
+                ptq::apply_into(&g, nb, &mut rng, &mut out);
+                std::hint::black_box(&out);
+            })
+            .median_ns;
+        let mut rng = Pcg32::new(3, 4);
+        let fused_psq_ns = b
+            .run(&format!("fused/psq {n}x{d}"), elems, || {
+                psq::apply_into(&g, nb, &mut rng, &mut out);
+                std::hint::black_box(&out);
+            })
+            .median_ns;
+        let mut scratch = bhq::Scratch::default();
+        let mut rng = Pcg32::new(3, 5);
+        let fused_bhq_ns = b
+            .run(&format!("fused/bhq {n}x{d}"), elems, || {
+                bhq::apply_into(&g, nb, &mut rng, &mut scratch, &mut out);
+                std::hint::black_box(&out);
+            })
+            .median_ns;
+
+        // Derived per-quantizer gauges for the BENCH_quantizers.json
+        // trajectory: elems/s of the fused path + fused-over-allocating
+        // speedup, labeled by quantizer and shape.
+        let m = statquant::obs::metrics();
+        let shape = format!("{n}x{d}");
+        for (q, alloc_ns, fused_ns) in [
+            ("ptq", ptq_ns, fused_ptq_ns),
+            ("psq", psq_ns, fused_psq_ns),
+            ("bhq", bhq_ns, fused_bhq_ns),
+        ] {
+            let labels = [("quantizer", q), ("shape", shape.as_str())];
+            m.gauge(
+                &statquant::obs::registry::labeled("quant_fused_elems_per_sec", &labels),
+                "fused quantize-dequantize throughput (median)",
+            )
+            .set(elems / (fused_ns.max(1.0) * 1e-9));
+            m.gauge(
+                &statquant::obs::registry::labeled("quant_fused_speedup", &labels),
+                "fused apply_into speedup over the allocating quantize path (median)",
+            )
+            .set(alloc_ns / fused_ns.max(1.0));
+        }
         let mut rng = Pcg32::new(3, 6);
         b.run(&format!("quantize/fp8 {n}x{d}"), elems, || {
             std::hint::black_box(fp8::quantize(&g, &mut rng));

@@ -15,36 +15,101 @@ use statquant::config::TrainConfig;
 use statquant::coordinator::{make_dataset, DataParallel, ReduceMode, Schedule, Trainer};
 use statquant::data::Dataset;
 use statquant::quant::GradQuantizer;
-use statquant::runtime::{Registry, Runtime, StepKind};
+use statquant::runtime::{
+    native, ExecutorBackend, HostTensor, MlpSpec, NativeExecutor, Registry, Runtime, StepKind,
+};
 use statquant::util::bench::Bench;
+use statquant::util::rng::Pcg32;
 
 fn main() {
-    let rt = match Runtime::cpu() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping train_step bench: {e}");
-            return;
+    let mut b = Bench::new();
+    // The kernel-layer bench needs no artifacts on disk — it drives the
+    // native backend directly — so it runs (and BENCH_train_step.json is
+    // written) even where `make artifacts` hasn't.
+    bench_native_kernels(&mut b);
+    match (Runtime::cpu(), Registry::open("artifacts")) {
+        (Ok(rt), Ok(reg)) => {
+            bench_trainer(&mut b, &rt, &reg);
+            bench_data_parallel(&mut b, &rt, &reg);
         }
-    };
-    let reg = match Registry::open("artifacts") {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("skipping train_step bench (run `make artifacts`): {e}");
-            return;
+        (Err(e), _) => eprintln!("skipping trainer/dp benches: {e}"),
+        (_, Err(e)) => eprintln!("skipping trainer/dp benches (run `make artifacts`): {e}"),
+    }
+    b.finish("train_step").expect("bench artifacts");
+    println!("\nwrote results/bench/train_step.csv + BENCH_train_step.json");
+}
+
+/// Blocked-kernel vs per-sample-reference train step on the default
+/// `MlpSpec` geometry (ISSUE 9 acceptance): the `native_step_speedup`
+/// gauge is the exact-variant median ratio, with per-variant ratios as
+/// labeled gauges (FQT variants include the fused quantizer path).
+fn bench_native_kernels(b: &mut Bench) {
+    let spec = MlpSpec::default();
+    let params = native::init_params(&spec);
+    let mut rng = Pcg32::new(0xBE7C, 5);
+    let x: Vec<f32> = (0..spec.batch * spec.in_dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..spec.batch)
+        .map(|_| rng.below(spec.classes as u32) as i32)
+        .collect();
+    let blocked = NativeExecutor::default();
+    let reference = NativeExecutor::reference();
+    let m = statquant::obs::metrics();
+    let mut headline = 1.0f64;
+    for variant in ["exact", "psq", "bhq"] {
+        let meta = native::meta_for(&spec, variant, StepKind::Train);
+        let inputs = [
+            HostTensor::F32(params.clone()),
+            HostTensor::F32(vec![0.0; params.len()]),
+            HostTensor::F32(x.clone()),
+            HostTensor::I32(y.clone()),
+            HostTensor::F32(vec![1.0]),
+            HostTensor::F32(vec![0.05]),
+            HostTensor::F32(vec![4.0]),
+        ];
+        let reference_ns = b
+            .run(&format!("native/reference/{variant}"), 1.0, || {
+                std::hint::black_box(reference.execute(&meta, &inputs).expect("reference step"));
+            })
+            .median_ns;
+        let blocked_ns = b
+            .run(&format!("native/blocked/{variant}"), 1.0, || {
+                std::hint::black_box(blocked.execute(&meta, &inputs).expect("blocked step"));
+            })
+            .median_ns;
+        let speedup = reference_ns / blocked_ns.max(1.0);
+        println!("native step speedup ({variant}): {speedup:.2}x");
+        m.gauge(
+            &statquant::obs::registry::labeled(
+                "native_step_speedup_variant",
+                &[("variant", variant)],
+            ),
+            "blocked-kernel native train-step speedup over the per-sample reference (median)",
+        )
+        .set(speedup);
+        if variant == "exact" {
+            headline = speedup;
         }
-    };
+    }
+    m.gauge(
+        "native_step_speedup",
+        "blocked-kernel native train-step speedup over the per-sample reference \
+         (exact variant, default MlpSpec, median ratio)",
+    )
+    .set(headline);
+}
+
+fn bench_trainer(b: &mut Bench, rt: &Runtime, reg: &Registry) {
     let models = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "mlp,cnn,transformer".into());
     let variants =
         std::env::var("BENCH_VARIANTS").unwrap_or_else(|_| "exact,qat,ptq,psq,bhq".into());
 
-    let mut b = Bench::new();
     for model in models.split(',') {
         // data generation cost (off the executor path)
         {
             let mut cfg = TrainConfig::default();
             cfg.model = model.into();
             cfg.variant = "qat".into();
-            if let Ok(tr) = Trainer::new(&rt, &reg, cfg) {
+            if let Ok(tr) = Trainer::new(rt, reg, cfg) {
                 let ds: &dyn Dataset = tr.dataset.as_ref();
                 let mut step = 0u64;
                 b.run(&format!("data/batch {model}"), 1.0, || {
@@ -60,7 +125,7 @@ fn main() {
             cfg.bits = 5.0;
             cfg.steps = 1;
             cfg.out_dir = "results/bench_runs".into();
-            let mut tr = match Trainer::new(&rt, &reg, cfg) {
+            let mut tr = match Trainer::new(rt, reg, cfg) {
                 Ok(t) => t,
                 Err(e) => {
                     eprintln!("skip {model}/{variant}: {e}");
@@ -79,15 +144,12 @@ fn main() {
         cfg.model = model.into();
         cfg.variant = "qat".into();
         cfg.out_dir = "results/bench_runs".into();
-        if let Ok(tr) = Trainer::new(&rt, &reg, cfg) {
+        if let Ok(tr) = Trainer::new(rt, reg, cfg) {
             b.run(&format!("eval_step/{model}"), 1.0, || {
                 std::hint::black_box(tr.evaluate(1).expect("eval"));
             });
         }
     }
-    bench_data_parallel(&mut b, &rt, &reg);
-    b.finish("train_step").expect("bench artifacts");
-    println!("\nwrote results/bench/train_step.csv + BENCH_train_step.json");
 }
 
 /// Serial vs threaded data-parallel engine (ISSUE 8 acceptance): 4-worker

@@ -1,4 +1,4 @@
-//! Ablations called out in DESIGN.md §7.
+//! Ablations called out in DESIGN.md §8.
 
 use anyhow::Result;
 

@@ -1,5 +1,5 @@
 //! Experiment harness (S15): one module per paper table/figure.
-//! See DESIGN.md §7 for the experiment index.
+//! See DESIGN.md §8 for the experiment index.
 
 pub mod ablations;
 pub mod common;

@@ -8,6 +8,7 @@
 //!   gen-artifacts [--artifacts DIR]          write the native MLP artifacts
 //!   list                                     show available artifacts
 //!   trace-report <run-dir>                   render obs artifacts as markdown
+//!   bench-check [names...] [--min g=thr ...] gate CI on bench snapshots
 //!
 //! Python never runs here: either `make artifacts` (AOT-lowered HLO, run
 //! under `--features pjrt`) or `statquant gen-artifacts` (native backend)
@@ -15,7 +16,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use statquant::config::TrainConfig;
 use statquant::coordinator::{Checkpoint, Trainer};
@@ -24,6 +25,7 @@ use statquant::metrics::fmt_sig;
 use statquant::runtime::{MlpSpec, Registry, Runtime, StepKind};
 use statquant::stats::GradVarianceProbe;
 use statquant::util::cli::Args;
+use statquant::util::json::Json;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -34,7 +36,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: statquant <train|eval|probe|exp|list|trace-report> [options]\n\
+    "usage: statquant <train|eval|probe|exp|list|trace-report|bench-check> [options]\n\
      \n\
      train [config.toml] [--artifacts DIR] [--set key=value ...]\n\
      \x20     [--dp-threads N] [--dp-mode dense|ring]   data-parallel engine\n\
@@ -45,7 +47,10 @@ fn usage() -> &'static str {
      gen-artifacts [--artifacts DIR]\n\
      list  [--artifacts DIR]\n\
      trace-report <run-dir>   per-phase time breakdown + quantizer health\n\
-     \x20                      from trace.json / metrics.prom / log.jsonl\n"
+     \x20                      from trace.json / metrics.prom / log.jsonl\n\
+     bench-check [names...] [--dir results/bench] [--min gauge=threshold ...]\n\
+     \x20                      fail unless every BENCH_<name>.json exists, parses,\n\
+     \x20                      records gauges, and meets the --min gates\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -79,6 +84,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args, &artifacts),
         "eval" => cmd_eval(&args, &artifacts),
         "probe" => cmd_probe(&args, &artifacts),
+        "bench-check" => cmd_bench_check(&args),
         "trace-report" => {
             let dir = args
                 .positional
@@ -104,6 +110,75 @@ fn run(argv: &[String]) -> Result<()> {
         }
         other => bail!("unknown command {other:?}\n{}", usage()),
     }
+}
+
+/// CI bench gate: every named `BENCH_<name>.json` snapshot must exist,
+/// parse, and carry a non-empty `gauges` object; every `--min g=thr`
+/// gate must be met by the gauge `g` (exact name, or every labeled
+/// series `g{...}`). Non-numeric gauge values (the snapshot encodes
+/// non-finite floats as strings) fail the gate rather than pass it.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let dir = args.flag("dir").unwrap_or("results/bench").to_string();
+    let mins: Vec<String> = args.flag_all("min").iter().map(|s| s.to_string()).collect();
+    let names: Vec<String> = if args.positional.is_empty() {
+        vec!["train_step".into(), "quantizers".into()]
+    } else {
+        args.positional.clone()
+    };
+    args.check_unknown()?;
+
+    let mut gauges: std::collections::BTreeMap<String, Json> = Default::default();
+    for name in &names {
+        let path = Path::new(&dir).join(format!("BENCH_{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("bench snapshot missing: {}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("malformed {} at byte {}: {}", path.display(), e.pos, e.msg))?;
+        let g = match json.get("gauges") {
+            Some(Json::Obj(m)) if !m.is_empty() => m,
+            _ => bail!(
+                "{}: no gauges recorded (missing or empty `gauges` object)",
+                path.display()
+            ),
+        };
+        println!("[bench-check] {}: {} gauges", path.display(), g.len());
+        for (k, v) in g {
+            gauges.insert(k.clone(), v.clone());
+        }
+    }
+
+    for spec in &mins {
+        let (gname, thr) = spec
+            .split_once('=')
+            .with_context(|| format!("--min expects gauge=threshold, got {spec:?}"))?;
+        let thr: f64 = thr
+            .parse()
+            .with_context(|| format!("--min {spec:?}: threshold is not a number"))?;
+        let labeled_prefix = format!("{gname}{{");
+        let matching: Vec<(&String, &Json)> = gauges
+            .iter()
+            .filter(|(k, _)| k.as_str() == gname || k.starts_with(&labeled_prefix))
+            .collect();
+        if matching.is_empty() {
+            bail!("gauge {gname:?} not found in any checked bench snapshot");
+        }
+        for (k, v) in matching {
+            let val = v.as_f64().with_context(|| {
+                format!("gauge {k} is non-numeric ({v:?}) — the bench recorded a non-finite value")
+            })?;
+            if val < thr {
+                bail!("gauge {k} = {val} is below the required minimum {thr}");
+            }
+            println!("[bench-check] {k} = {val:.3} >= {thr}");
+        }
+    }
+    println!(
+        "[bench-check] ok: {} snapshot(s), {} gauge(s), {} gate(s)",
+        names.len(),
+        gauges.len(),
+        mins.len()
+    );
+    Ok(())
 }
 
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {

@@ -50,8 +50,34 @@ pub enum Proxy {
     Extended,
 }
 
+/// Score one candidate group count with the selected variance proxy.
+fn proxy_score(sorted_mags: &[f32], g: usize, proxy: Proxy) -> f64 {
+    let n = sorted_mags.len();
+    let tot: f64 = sorted_mags[..g].iter().map(|&m| f64::from(m)).sum();
+    let tot = tot.max(f64::from(EPS_RANGE));
+    let lam2 = 2.0 * f64::from(sorted_mags.get(g).copied().unwrap_or(0.0));
+    sorted_mags[..g]
+        .iter()
+        .map(|&m| {
+            let m = f64::from(m);
+            let size = 1.0 + (n - g) as f64 * m / tot;
+            match proxy {
+                Proxy::Paper => m * m / size,
+                Proxy::Extended => {
+                    let a = m.max(f64::from(EPS_RANGE)).powf(2.0 / 3.0) * size.powf(-1.0 / 3.0);
+                    let b = lam2.powf(2.0 / 3.0) * size.powf(2.0 / 3.0);
+                    (a + b).powi(3)
+                }
+            }
+        })
+        .sum()
+}
+
 /// Appendix-D.5 step 2: sweep candidate group counts G in powers of two,
 /// score each with the selected variance proxy, pick the argmin.
+/// Candidate order (ascending powers of two, then N) and the strict `<`
+/// argmin are load-bearing: ties keep the earlier candidate, and the
+/// fused path relies on replaying the identical choice.
 pub fn select_group_count_with(sorted_mags: &[f32], proxy: Proxy) -> usize {
     let n = sorted_mags.len();
     if n == 0 {
@@ -60,41 +86,21 @@ pub fn select_group_count_with(sorted_mags: &[f32], proxy: Proxy) -> usize {
     // powers of two up to N/2, plus G = N (all-singleton = PSQ fallback:
     // Q = I, s1 = B/R — essential on homogeneous gradients, where any
     // grouping smears equal rows together and inflates variance ~ m^2).
-    let mut cands: Vec<usize> = Vec::new();
-    let mut g = 1;
-    while g <= (n / 2).max(1) {
-        cands.push(g);
-        g *= 2;
-    }
-    if !cands.contains(&n) {
-        cands.push(n);
-    }
     let mut best_g = 1;
     let mut best = f64::INFINITY;
-    for g in cands {
-        let tot: f64 = sorted_mags[..g].iter().map(|&m| f64::from(m)).sum();
-        let tot = tot.max(f64::from(EPS_RANGE));
-        let lam2 = 2.0 * f64::from(sorted_mags.get(g).copied().unwrap_or(0.0));
-        let score: f64 = sorted_mags[..g]
-            .iter()
-            .map(|&m| {
-                let m = f64::from(m);
-                let size = 1.0 + (n - g) as f64 * m / tot;
-                match proxy {
-                    Proxy::Paper => m * m / size,
-                    Proxy::Extended => {
-                        let a = m.max(f64::from(EPS_RANGE)).powf(2.0 / 3.0)
-                            * size.powf(-1.0 / 3.0);
-                        let b = lam2.powf(2.0 / 3.0) * size.powf(2.0 / 3.0);
-                        (a + b).powi(3)
-                    }
-                }
-            })
-            .sum();
+    let mut saw_n = false;
+    let mut g = 1;
+    while g <= (n / 2).max(1) {
+        saw_n |= g == n;
+        let score = proxy_score(sorted_mags, g, proxy);
         if score < best {
             best = score;
             best_g = g;
         }
+        g *= 2;
+    }
+    if !saw_n && proxy_score(sorted_mags, n, proxy) < best {
+        best_g = n;
     }
     best_g
 }
@@ -340,6 +346,232 @@ pub fn quantize_stats(
         },
         st,
     )
+}
+
+/// One group in the fused plan: leader is the sorted index equal to the
+/// group's position, extras are a contiguous `[start, end)` range of
+/// sorted indices (the cumulative-boundary assignment deals ascending
+/// positions to ascending groups, so membership is always contiguous).
+struct GroupSpan {
+    extras: (usize, usize),
+    s1: f32,
+    s2: f32,
+}
+
+/// Reusable buffers for [`apply_into`]: the index sort, the plan, and
+/// the transformed-row matrix all live here across calls, so a warm
+/// scratch makes the fused BHQ path allocation-free.
+#[derive(Default)]
+pub struct Scratch {
+    mags: Vec<f32>,
+    order: Vec<usize>,
+    sorted_mags: Vec<f32>,
+    bounds: Vec<f64>,
+    spans: Vec<GroupSpan>,
+    srow: Vec<f32>,
+    ys: Mat,
+    t: Vec<f32>,
+}
+
+/// [`reflect`] on the flat sorted-row matrix with a caller-owned
+/// accumulator — same per-column addition order (leader first, then
+/// members ascending), so results are bitwise identical.
+fn reflect_span(ys: &mut Mat, leader: usize, extras: (usize, usize), t: &mut [f32]) {
+    let m = 1 + extras.1 - extras.0;
+    if m == 1 {
+        return; // n = 0 -> identity
+    }
+    let inv_sqrt_m = 1.0 / (m as f32).sqrt();
+    let n_leader = inv_sqrt_m - 1.0;
+    let nsq = n_leader * n_leader + (m - 1) as f32 * inv_sqrt_m * inv_sqrt_m;
+    let coef = 2.0 / nsq;
+    t.fill(0.0);
+    for (tj, &v) in t.iter_mut().zip(ys.row(leader)) {
+        *tj += n_leader * v;
+    }
+    for r in extras.0..extras.1 {
+        for (tj, &v) in t.iter_mut().zip(ys.row(r)) {
+            *tj += inv_sqrt_m * v;
+        }
+    }
+    let f = coef * n_leader;
+    for (v, &tj) in ys.row_mut(leader).iter_mut().zip(t.iter()) {
+        *v -= f * tj;
+    }
+    let f = coef * inv_sqrt_m;
+    for r in extras.0..extras.1 {
+        for (v, &tj) in ys.row_mut(r).iter_mut().zip(t.iter()) {
+            *v -= f * tj;
+        }
+    }
+}
+
+/// Fused quantize-dequantize into a caller-owned buffer, bitwise
+/// identical to `quantize(x, nbins, rng).deq` (extended proxy): the plan
+/// arithmetic, reflection order, RNG draw order, and telemetry cadence
+/// all replay exactly. Differences are purely structural — the index
+/// sort and plan reuse `scratch`, groups are `(leader, extras-range)`
+/// spans instead of per-group index vectors, the transformed rows live
+/// in one flat matrix instead of `Vec<Vec<f32>>`, and the codes matrix
+/// is never materialized (codes + zero point are written back in place).
+pub fn apply_into(x: &Mat, nbins: f32, rng: &mut Pcg32, scratch: &mut Scratch, out: &mut Mat) {
+    let tel = crate::obs::quant::bhq();
+    let sample_variance = tel.should_sample();
+    let mut st = QuantStats::default();
+    let (n, d) = (x.rows, x.cols);
+    out.resize(n, d);
+    if x.data.iter().any(|v| v.is_nan()) {
+        st.poisoned_rows = n as u64;
+        out.data.fill(f32::NAN);
+        tel.record(&st);
+        return;
+    }
+    let Scratch {
+        mags,
+        order,
+        sorted_mags,
+        bounds,
+        spans,
+        srow,
+        ys,
+        t,
+    } = scratch;
+
+    // Plan: descending-magnitude index sort (stable-equivalent via the
+    // ascending-index tiebreak; magnitudes are abs-maxes, never -0.0),
+    // group-count sweep, contiguous extras assignment, per-group scales —
+    // the same arithmetic as `build_plan_with`, minus its allocations.
+    mags.clear();
+    for i in 0..n {
+        let mut m = 0.0f32;
+        for &v in x.row(i) {
+            m = m.max(v.abs());
+        }
+        mags.push(m);
+    }
+    order.clear();
+    order.extend(0..n);
+    order.sort_unstable_by(|&a, &b| mags[b].total_cmp(&mags[a]).then(a.cmp(&b)));
+    sorted_mags.clear();
+    sorted_mags.extend(order.iter().map(|&i| mags[i]));
+    let g = select_group_count_with(sorted_mags, Proxy::Extended);
+
+    let tot: f64 = sorted_mags[..g].iter().map(|&m| f64::from(m)).sum();
+    let tot = tot.max(f64::from(EPS_RANGE));
+    bounds.clear();
+    let mut acc = 0.0;
+    for &m in &sorted_mags[..g] {
+        acc += (n - g) as f64 * f64::from(m) / tot;
+        bounds.push(acc);
+    }
+    spans.clear();
+    let mut j = g;
+    for gi in 0..g {
+        let start = j;
+        if gi + 1 == g {
+            j = n; // last group absorbs the tail (the `unwrap_or(g - 1)`)
+        } else {
+            while j < n && ((j - g) as f64 + 0.5) < bounds[gi] {
+                j += 1;
+            }
+        }
+        spans.push(GroupSpan {
+            extras: (start, j),
+            s1: 0.0,
+            s2: 0.0,
+        });
+    }
+    for (gi, span) in spans.iter_mut().enumerate() {
+        let m = (1 + span.extras.1 - span.extras.0) as f64;
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in x.row(order[gi]) {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let mag_leader = f64::from(sorted_mags[gi]);
+        let lam1 = f64::from(hi - lo)
+            .max(1e-3 * mag_leader)
+            .max(f64::from(EPS_RANGE));
+        // extras are sorted (descending magnitude), so the largest
+        // non-leader is the first one.
+        let lam2 = if span.extras.1 > span.extras.0 {
+            f64::from(sorted_mags[span.extras.0]) * 2.0
+        } else {
+            0.0
+        };
+        let lam2 = lam2.max(f64::from(EPS_RANGE));
+        let denom = lam1.powf(2.0 / 3.0) * m.powf(-1.0 / 3.0)
+            + lam2.powf(2.0 / 3.0) * m.powf(2.0 / 3.0);
+        let denom = denom.max(f64::from(EPS_RANGE));
+        span.s1 = ((lam1.powf(-1.0 / 3.0) * m.powf(1.0 / 6.0)) / denom)
+            .min(f64::from(MAX_SCALE)) as f32;
+        span.s2 = ((lam2.powf(-1.0 / 3.0) * m.powf(1.0 / 6.0)) / denom)
+            .min(f64::from(MAX_SCALE)) as f32;
+    }
+
+    // Gather + scale sorted rows into the flat transform buffer.
+    srow.clear();
+    srow.resize(n, 0.0);
+    for (gi, span) in spans.iter().enumerate() {
+        srow[gi] = nbins * span.s1;
+        for s in &mut srow[span.extras.0..span.extras.1] {
+            *s = nbins * span.s2;
+        }
+    }
+    ys.resize(n, d);
+    for k in 0..n {
+        let s = srow[k];
+        for (yv, &v) in ys.row_mut(k).iter_mut().zip(x.row(order[k])) {
+            *yv = v * s;
+        }
+    }
+    t.resize(d, 0.0);
+    for (gi, span) in spans.iter().enumerate() {
+        reflect_span(ys, gi, span.extras, t);
+    }
+
+    // Per-row zero point + SR, writing `code + z` back in place (the
+    // reference path's codes-then-rec split, fused).
+    let mut pvar = 0.0f64;
+    for k in 0..n {
+        let row = ys.row_mut(k);
+        let lo = row.iter().fold(f32::INFINITY, |a, &v| a.min(v));
+        let z = if lo.is_finite() { lo } else { 0.0 };
+        let inv_s2 = if sample_variance {
+            1.0 / f64::from(srow[k]).powi(2)
+        } else {
+            0.0
+        };
+        for v in row.iter_mut() {
+            let tv = *v - z;
+            let raw = sr::sr(tv, rng);
+            let q = raw.max(0.0);
+            st.clipped += u64::from(raw != q);
+            st.zero_codes += u64::from(q == 0.0);
+            if sample_variance {
+                let p = f64::from(tv) - f64::from(tv.floor());
+                pvar += p * (1.0 - p) * inv_s2;
+            }
+            *v = q + z;
+        }
+    }
+    st.values = (n * d) as u64;
+    if sample_variance {
+        st.sr_variance = Some(pvar);
+    }
+
+    // Reflect back (Q^2 = I) and unscale into the original row order.
+    for (gi, span) in spans.iter().enumerate() {
+        reflect_span(ys, gi, span.extras, t);
+    }
+    for k in 0..n {
+        let inv_s = 1.0 / srow[k];
+        for (o, &v) in out.row_mut(order[k]).iter_mut().zip(ys.row(k)) {
+            *o = v * inv_s;
+        }
+    }
+    tel.record(&st);
 }
 
 #[cfg(test)]

@@ -88,6 +88,39 @@ impl GradQuantizer {
             GradQuantizer::Bfp => bfp::quantize(x, b, 64, rng),
         }
     }
+
+    /// Fused [`apply`]: quantize-dequantize into a caller-owned output
+    /// buffer, reusing `scratch` across calls so the paper quantizers
+    /// allocate nothing once warm (the native executor's hot path).
+    /// Bitwise identical to `apply` — same math, same RNG draw order,
+    /// same telemetry cadence (enforced by `tests/kernel_parity.rs`).
+    pub fn apply_into(
+        self,
+        x: &Mat,
+        bits: f32,
+        rng: &mut Pcg32,
+        scratch: &mut FusedScratch,
+        out: &mut Mat,
+    ) {
+        let b = nbins(bits);
+        match self {
+            GradQuantizer::Ptq => ptq::apply_into(x, b, rng, out),
+            GradQuantizer::Psq => psq::apply_into(x, b, rng, out),
+            GradQuantizer::Bhq => bhq::apply_into(x, b, rng, &mut scratch.bhq, out),
+            // Table-2 comparison formats are not FQT train-variant
+            // quantizers, so they stay on the allocating path.
+            GradQuantizer::Fp8 => *out = fp8::quantize(x, rng),
+            GradQuantizer::Bfp => *out = bfp::quantize(x, b, 64, rng),
+        }
+    }
+}
+
+/// Reusable buffers for [`GradQuantizer::apply_into`]. One per executor
+/// workspace; only BHQ needs real scratch (plan + transform buffers) —
+/// PTQ/PSQ fuse into single passes over the output.
+#[derive(Default)]
+pub struct FusedScratch {
+    bhq: bhq::Scratch,
 }
 
 /// Per-call telemetry emitted by the native quantizers alongside their

@@ -86,6 +86,49 @@ pub fn quantize_stats(
     )
 }
 
+/// Fused quantize-dequantize into a caller-owned buffer: the per-row
+/// (min, max) is reduced inline (no `row_minmax` vector), codes and
+/// dequantized values come out of one loop (the separate deq pass draws
+/// no RNG, so fusing it preserves the draw order), and nothing is
+/// allocated once `out` has warmed up to shape. Bitwise identical to
+/// `quantize(x, nbins, rng).deq`.
+pub fn apply_into(x: &Mat, nbins: f32, rng: &mut Pcg32, out: &mut Mat) {
+    let tel = crate::obs::quant::psq();
+    let sample_variance = tel.should_sample();
+    let mut st = QuantStats::default();
+    out.resize(x.rows, x.cols);
+    let mut pvar = 0.0f64;
+    for i in 0..x.rows {
+        let (lo, hi) = super::tensor::minmax_slice(x.row(i));
+        if (hi - lo).is_nan() {
+            st.poisoned_rows += 1;
+            for d in out.row_mut(i) {
+                *d = f32::NAN;
+            }
+            continue;
+        }
+        let range = (hi - lo).max(EPS_RANGE);
+        let scale = (nbins / range).min(MAX_SCALE);
+        st.values += x.cols as u64;
+        for (d, &v) in out.row_mut(i).iter_mut().zip(x.row(i)) {
+            let t = scale * (v - lo);
+            let raw = sr::sr(t, rng);
+            let q = raw.clamp(0.0, nbins);
+            st.clipped += u64::from(raw != q);
+            st.zero_codes += u64::from(q == 0.0);
+            if sample_variance {
+                let p = f64::from(t) - f64::from(t.floor());
+                pvar += p * (1.0 - p) / f64::from(scale).powi(2);
+            }
+            *d = q / scale + lo;
+        }
+    }
+    if sample_variance {
+        st.sr_variance = Some(pvar);
+    }
+    tel.record(&st);
+}
+
 /// §4.1 bound: D/(4B^2) * sum_i R(x_i)^2.
 pub fn variance_bound(x: &Mat, nbins: f32) -> f64 {
     let sum_r2: f64 = x

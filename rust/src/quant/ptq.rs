@@ -73,6 +73,45 @@ pub fn quantize_stats(
     )
 }
 
+/// Fused quantize-dequantize into a caller-owned buffer: one pass, no
+/// codes matrix, no output allocation once `out` has warmed up to shape
+/// (the native executor's zero-allocation step path). Bitwise identical
+/// to `quantize(x, nbins, rng).deq` — same scale/zero math, same RNG
+/// draw order, same telemetry cadence.
+pub fn apply_into(x: &Mat, nbins: f32, rng: &mut Pcg32, out: &mut Mat) {
+    let tel = crate::obs::quant::ptq();
+    let sample_variance = tel.should_sample();
+    let mut st = QuantStats::default();
+    out.resize(x.rows, x.cols);
+    let (lo, hi) = x.minmax();
+    if (hi - lo).is_nan() {
+        st.poisoned_rows = x.rows as u64;
+        out.data.fill(f32::NAN);
+        tel.record(&st);
+        return;
+    }
+    let range = (hi - lo).max(EPS_RANGE);
+    let scale = (nbins / range).min(MAX_SCALE);
+    let mut pvar = 0.0f64;
+    for (d, &v) in out.data.iter_mut().zip(&x.data) {
+        let t = scale * (v - lo);
+        let raw = sr::sr(t, rng);
+        let q = raw.clamp(0.0, nbins);
+        st.clipped += u64::from(raw != q);
+        st.zero_codes += u64::from(q == 0.0);
+        if sample_variance {
+            let p = f64::from(t) - f64::from(t.floor());
+            pvar += p * (1.0 - p);
+        }
+        *d = q / scale + lo;
+    }
+    st.values = x.data.len() as u64;
+    if sample_variance {
+        st.sr_variance = Some(pvar / f64::from(scale).powi(2));
+    }
+    tel.record(&st);
+}
+
 /// Deterministic round-to-nearest PTQ (the forward-path Q_f / Q_theta).
 pub fn quantize_det(x: &Mat, nbins: f32) -> Mat {
     let (lo, hi) = x.minmax();

@@ -5,7 +5,7 @@
 //! quantizers — not a general linear-algebra library. Hot operations
 //! (row reductions, axpy) are written to autovectorize.
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -95,6 +95,16 @@ impl Mat {
             .collect()
     }
 
+    /// Reshape in place to `rows x cols`, zero-filling any new tail.
+    /// Never shrinks the backing capacity — the workspace-arena buffers
+    /// (see `runtime/native.rs`) rely on this to stay allocation-free
+    /// once warm.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Frobenius norm squared.
     pub fn frob_sq(&self) -> f64 {
         self.data.iter().map(|&v| f64::from(v) * f64::from(v)).sum()
@@ -114,7 +124,10 @@ impl Mat {
     }
 }
 
-fn minmax_slice(xs: &[f32]) -> (f32, f32) {
+/// (min, max) of a slice with the same NaN-propagation contract as
+/// [`Mat::minmax`]; shared with the fused quantizer paths so they can
+/// reduce rows in place without a `row_minmax` temporary.
+pub(crate) fn minmax_slice(xs: &[f32]) -> (f32, f32) {
     let mut lo = f32::INFINITY;
     let mut hi = f32::NEG_INFINITY;
     for &v in xs {

@@ -1,0 +1,435 @@
+//! Cache-blocked f32 compute kernels for the native executor.
+//!
+//! Row-major, batched GEMM / GEMM-transpose primitives plus the fused
+//! epilogues the MLP interpreter needs (bias-init, relu, relu-mask,
+//! column sums). The blocked `gemm` replaces the per-sample triple loops
+//! that used to live in `native.rs`; `naive` retains the reference
+//! formulation for the golden-parity harness (`tests/kernel_parity.rs`).
+//!
+//! ## Tiling scheme
+//!
+//! `gemm` computes `C (m x n) = init + A (m x k) · B (k x n)` as an
+//! axpy-style kernel: the K axis is split into [`KC`]-wide tiles (so the
+//! active B panel stays cache-resident across the whole row sweep), and
+//! rows of C are processed [`MR`] at a time so each B row loaded from
+//! cache is reused against `MR` accumulator rows. The inner loop is a
+//! column panel (`c[j] += a_ik * b[k][j]` over contiguous `j`) with no
+//! horizontal reductions — exactly the shape LLVM's autovectorizer turns
+//! into SIMD fma-free lanes.
+//!
+//! ## Determinism contract (load-bearing)
+//!
+//! Every output element is produced by a *single* accumulator whose
+//! additions happen in ascending-k order (for [`gemm`]) or ascending-m
+//! order (for [`gemm_at_b`]), starting from the init value — the same
+//! per-element operation sequence as the naive triple loop. Rust f32
+//! `a * b + c` lowers to separate IEEE-754 mul and add (never contracted
+//! to fma), and vector lanes are element-independent, so the blocked
+//! kernels are **bitwise identical** to `naive` regardless of
+//! autovectorization. The parity tests assert this; if a future change
+//! reassociates an accumulation (e.g. split-K with a reduction tree), it
+//! must widen those tests to a tolerance band and update DESIGN.md §5.
+//!
+//! Zero multipliers are never skipped: `0.0 * inf = NaN` and the
+//! quantizers' poison contract depends on NaN propagating through the
+//! backward matmuls.
+
+/// K-tile width: `KC * n * 4` bytes of B panel kept hot (for the MLP
+/// geometries n is tens of columns, so the panel is well under L1).
+pub const KC: usize = 128;
+
+/// Rows of C processed together so one B row load feeds MR accumulator
+/// rows held in registers.
+pub const MR: usize = 4;
+
+/// How the C buffer is seeded before accumulation.
+#[derive(Clone, Copy, Debug)]
+pub enum Init<'a> {
+    /// `C = 0` before accumulation.
+    Zero,
+    /// Every row of C starts as this bias vector (len n) — the fused
+    /// bias-add epilogue, applied as *initialization* so the add order
+    /// matches `bias + sum_k(..)` exactly.
+    Bias(&'a [f32]),
+}
+
+fn apply_init(c: &mut [f32], init: Init<'_>, n: usize) {
+    match init {
+        Init::Zero => c.fill(0.0),
+        Init::Bias(bias) => {
+            assert_eq!(bias.len(), n, "gemm: bias length != n");
+            for row in c.chunks_exact_mut(n) {
+                row.copy_from_slice(bias);
+            }
+        }
+    }
+}
+
+/// One C row accumulating one scaled B row: `c[j] += a * b[j]`.
+#[inline]
+fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+    for (cv, &bv) in c.iter_mut().zip(b) {
+        *cv += a * bv;
+    }
+}
+
+/// Four C rows accumulating the same B row (the MR = 4 micro-kernel).
+/// Each lane touches a distinct output element, so the per-element
+/// operation order is identical to four sequential `axpy` calls.
+#[inline]
+fn axpy4(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    a: [f32; 4],
+    b: &[f32],
+) {
+    for ((((x0, x1), x2), x3), &bv) in c0
+        .iter_mut()
+        .zip(c1.iter_mut())
+        .zip(c2.iter_mut())
+        .zip(c3.iter_mut())
+        .zip(b)
+    {
+        *x0 += a[0] * bv;
+        *x1 += a[1] * bv;
+        *x2 += a[2] * bv;
+        *x3 += a[3] * bv;
+    }
+}
+
+/// One C row accumulating four (scalar, B row) pairs in ascending sample
+/// order — the [`gemm_at_b`] micro-kernel. The adds chain through one
+/// accumulator per element, preserving the m-ascending order.
+#[inline]
+fn axpy_m4(c: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+    for ((((cv, &v0), &v1), &v2), &v3) in c.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3) {
+        let mut acc = *cv;
+        acc += a[0] * v0;
+        acc += a[1] * v1;
+        acc += a[2] * v2;
+        acc += a[3] * v3;
+        *cv = acc;
+    }
+}
+
+/// Blocked `C (m x n) = init + A (m x k) · B (k x n)`, all row-major.
+pub fn gemm(c: &mut [f32], init: Init<'_>, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "gemm: A is not m x k");
+    assert_eq!(b.len(), k * n, "gemm: B is not k x n");
+    assert_eq!(c.len(), m * n, "gemm: C is not m x n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    apply_init(c, init, n);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let mut i = 0;
+        while i + MR <= m {
+            let rows = &mut c[i * n..(i + MR) * n];
+            let (c0, rest) = rows.split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, c3) = rest.split_at_mut(n);
+            for kk in k0..k1 {
+                let scal = [
+                    a[i * k + kk],
+                    a[(i + 1) * k + kk],
+                    a[(i + 2) * k + kk],
+                    a[(i + 3) * k + kk],
+                ];
+                axpy4(c0, c1, c2, c3, scal, &b[kk * n..(kk + 1) * n]);
+            }
+            i += MR;
+        }
+        while i < m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                axpy(crow, a[i * k + kk], &b[kk * n..(kk + 1) * n]);
+            }
+            i += 1;
+        }
+        k0 = k1;
+    }
+}
+
+/// Blocked `C (k x n) = init + Aᵀ · B` for row-major `A (m x k)` and
+/// `B (m x n)` — the weight-gradient contraction over the batch axis.
+/// Samples are consumed in ascending order (four at a time), so each
+/// output element accumulates in the same order as the naive loop.
+pub fn gemm_at_b(
+    c: &mut [f32],
+    init: Init<'_>,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm_at_b: A is not m x k");
+    assert_eq!(b.len(), m * n, "gemm_at_b: B is not m x n");
+    assert_eq!(c.len(), k * n, "gemm_at_b: C is not k x n");
+    if k == 0 || n == 0 {
+        return;
+    }
+    apply_init(c, init, n);
+    let mut mi = 0;
+    while mi + 4 <= m {
+        let a0 = &a[mi * k..(mi + 1) * k];
+        let a1 = &a[(mi + 1) * k..(mi + 2) * k];
+        let a2 = &a[(mi + 2) * k..(mi + 3) * k];
+        let a3 = &a[(mi + 3) * k..(mi + 4) * k];
+        let b0 = &b[mi * n..(mi + 1) * n];
+        let b1 = &b[(mi + 1) * n..(mi + 2) * n];
+        let b2 = &b[(mi + 2) * n..(mi + 3) * n];
+        let b3 = &b[(mi + 3) * n..(mi + 4) * n];
+        for (kk, crow) in c.chunks_exact_mut(n).enumerate() {
+            axpy_m4(crow, [a0[kk], a1[kk], a2[kk], a3[kk]], b0, b1, b2, b3);
+        }
+        mi += 4;
+    }
+    while mi < m {
+        let ai = &a[mi * k..(mi + 1) * k];
+        let bi = &b[mi * n..(mi + 1) * n];
+        for (kk, crow) in c.chunks_exact_mut(n).enumerate() {
+            axpy(crow, ai[kk], bi);
+        }
+        mi += 1;
+    }
+}
+
+/// `dst (cols x rows) = srcᵀ` for row-major `src (rows x cols)`.
+pub fn transpose(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols, "transpose: src shape");
+    assert_eq!(dst.len(), rows * cols, "transpose: dst shape");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    for (i, row) in src.chunks_exact(cols).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            dst[j * rows + i] = v;
+        }
+    }
+}
+
+/// Elementwise `dst = max(src, 0)`.
+pub fn relu(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "relu: shape mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s.max(0.0);
+    }
+}
+
+/// Zero `g` wherever the pre-activation was non-positive (the backward
+/// relu mask; `<= 0.0` matches the forward `max(0.0)` subgradient).
+pub fn relu_mask(g: &mut [f32], pre: &[f32]) {
+    assert_eq!(g.len(), pre.len(), "relu_mask: shape mismatch");
+    for (v, &p) in g.iter_mut().zip(pre) {
+        if p <= 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// `out (n) = column sums of a (rows x n)`, rows consumed in ascending
+/// order — the bias-gradient reduction.
+pub fn col_sums(out: &mut [f32], a: &[f32], n: usize) {
+    assert_eq!(out.len(), n, "col_sums: out length != n");
+    out.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    assert_eq!(a.len() % n, 0, "col_sums: A not a multiple of n");
+    for row in a.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+/// Reference kernels: the unblocked triple loops the blocked versions
+/// must match bitwise (single accumulator, same per-element add order).
+pub mod naive {
+    use super::Init;
+
+    pub fn gemm(
+        c: &mut [f32],
+        init: Init<'_>,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = match init {
+                    Init::Zero => 0.0f32,
+                    Init::Bias(bias) => bias[j],
+                };
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+    }
+
+    pub fn gemm_at_b(
+        c: &mut [f32],
+        init: Init<'_>,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), m * n);
+        assert_eq!(c.len(), k * n);
+        for kk in 0..k {
+            for j in 0..n {
+                let mut acc = match init {
+                    Init::Zero => 0.0f32,
+                    Init::Bias(bias) => bias[j],
+                };
+                for mi in 0..m {
+                    acc += a[mi * k + kk] * b[mi * n + j];
+                }
+                c[kk * n + j] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_bitwise_across_shapes() {
+        let mut rng = Pcg32::new(71, 0);
+        // covers: empty axes, M=1, sub-MR remainders, K crossing KC
+        for (m, k, n) in [
+            (0, 0, 0),
+            (1, 1, 1),
+            (1, 5, 3),
+            (3, 7, 2),
+            (4, 0, 8),
+            (5, 7, 3),
+            (9, 130, 6),
+            (16, 300, 11),
+        ] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let bias = randv(n, &mut rng);
+            for init_bias in [false, true] {
+                let init = || {
+                    if init_bias {
+                        Init::Bias(&bias)
+                    } else {
+                        Init::Zero
+                    }
+                };
+                let mut c_blk = vec![f32::NAN; m * n];
+                let mut c_ref = vec![f32::NAN; m * n];
+                gemm(&mut c_blk, init(), &a, &b, m, k, n);
+                naive::gemm(&mut c_ref, init(), &a, &b, m, k, n);
+                assert_bitwise(&c_blk, &c_ref, &format!("gemm {m}x{k}x{n} bias={init_bias}"));
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_at_b_matches_naive_bitwise_across_shapes() {
+        let mut rng = Pcg32::new(72, 0);
+        for (m, k, n) in [
+            (0, 3, 2),
+            (1, 1, 1),
+            (2, 5, 3),
+            (4, 4, 4),
+            (7, 6, 5),
+            (65, 9, 10),
+        ] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(m * n, &mut rng);
+            let mut c_blk = vec![f32::NAN; k * n];
+            let mut c_ref = vec![f32::NAN; k * n];
+            gemm_at_b(&mut c_blk, Init::Zero, &a, &b, m, k, n);
+            naive::gemm_at_b(&mut c_ref, Init::Zero, &a, &b, m, k, n);
+            assert_bitwise(&c_blk, &c_ref, &format!("gemm_at_b {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn k_zero_reduces_to_init() {
+        let bias = vec![1.5f32, -2.0, 0.25];
+        let mut c = vec![9.0f32; 2 * 3];
+        gemm(&mut c, Init::Bias(&bias), &[], &[], 2, 0, 3);
+        assert_eq!(c, vec![1.5, -2.0, 0.25, 1.5, -2.0, 0.25]);
+        let mut c = vec![9.0f32; 2 * 3];
+        gemm(&mut c, Init::Zero, &[], &[], 2, 0, 3);
+        assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn zero_times_inf_still_poisons() {
+        // the quantizer poison contract: never skip zero multipliers
+        let a = [0.0f32];
+        let b = [f32::INFINITY];
+        let mut c = [0.0f32];
+        gemm(&mut c, Init::Zero, &a, &b, 1, 1, 1);
+        assert!(c[0].is_nan());
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let mut rng = Pcg32::new(73, 0);
+        let (r, c) = (5, 7);
+        let src = randv(r * c, &mut rng);
+        let mut t = vec![0.0f32; r * c];
+        let mut back = vec![0.0f32; r * c];
+        transpose(&mut t, &src, r, c);
+        transpose(&mut back, &t, c, r);
+        assert_eq!(src, back);
+        assert_eq!(t[3 * r + 2], src[2 * c + 3]);
+    }
+
+    #[test]
+    fn relu_and_mask_agree_on_subgradient_boundary() {
+        let pre = [-1.0f32, -0.0, 0.0, 0.5, 2.0];
+        let mut h = [9.0f32; 5];
+        relu(&mut h, &pre);
+        assert_eq!(h, [0.0, 0.0, 0.0, 0.5, 2.0]);
+        let mut g = [1.0f32; 5];
+        relu_mask(&mut g, &pre);
+        // masked exactly where relu flattened (p <= 0, both zero signs)
+        assert_eq!(g, [0.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn col_sums_matches_manual_reduction() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = [0.0f32; 2];
+        col_sums(&mut out, &a, 2);
+        assert_eq!(out, [1.0 + 3.0 + 5.0, 2.0 + 4.0 + 6.0]);
+        let mut empty: [f32; 0] = [];
+        col_sums(&mut empty, &[], 0);
+    }
+}

@@ -15,13 +15,14 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod kernels;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifact::{ArtifactMeta, Registry, StepKind, TensorSpec};
 pub use executor::{Executor, ExecutorBackend, HostTensor, StepOutputs};
-pub use native::{MlpSpec, NativeExecutor};
+pub use native::{KernelPath, MlpSpec, NativeExecutor};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -88,7 +89,7 @@ impl Runtime {
             return Ok(e.clone());
         }
         let backend: Box<dyn ExecutorBackend> = match &self.backend {
-            Backend::Native => Box::new(NativeExecutor),
+            Backend::Native => Box::new(NativeExecutor::default()),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(rt) => {
                 let t0 = std::time::Instant::now();

@@ -10,6 +10,18 @@
 //! unbiasedness and the §4 variance ordering hold through this backend
 //! exactly as through the lowered HLO.
 //!
+//! Two kernel paths implement the same math (see DESIGN.md §5):
+//!
+//!  * **blocked** (default) — whole-batch cache-blocked GEMMs from
+//!    [`super::kernels`] plus a per-thread [`Workspace`] arena, so the
+//!    hot loop does no heap allocation after warm-up and the quantizers
+//!    run their fused single-pass `apply_into` entry points;
+//!  * **reference** — the original per-sample interpreter, retained
+//!    verbatim as the golden reference. The two paths are bitwise
+//!    identical (kernel accumulation order is preserved; enforced by
+//!    `tests/kernel_parity.rs`), and their latency ratio is the
+//!    `native_step_speedup` bench headline.
+//!
 //! Artifact files are the same `.json` sidecars the Python AOT pipeline
 //! writes (plus placeholder `.hlo.txt` files, since there is no HLO to
 //! lower offline); [`write_artifacts`] generates a complete `mlp` set so
@@ -19,13 +31,16 @@
 //! Parameter layout (flat f32 vector, matching the sidecar `n_params`):
 //! `W1 (in_dim x hidden) | b1 (hidden) | W2 (hidden x classes) | b2 (classes)`
 
+use std::cell::RefCell;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::{ArtifactMeta, StepKind};
 use super::executor::{ExecutorBackend, HostTensor, StepOutputs};
-use crate::quant::{GradQuantizer, Mat};
+use super::kernels::{self, Init};
+use crate::obs::{Counter, Gauge};
+use crate::quant::{FusedScratch, GradQuantizer, Mat};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
 
@@ -122,169 +137,20 @@ impl MlpDims {
     }
 }
 
-/// Cached intermediates of one forward pass.
-struct Forward {
-    /// Pre-activation of the hidden layer (batch x hidden) — the relu
-    /// mask for the backward pass and the activation-gradient tap.
-    h_pre: Mat,
-    /// Post-relu hidden activations (batch x hidden).
-    h: Mat,
-    /// Softmax probabilities (batch x classes).
-    probs: Mat,
-    loss: f64,
-    acc: f64,
+fn dims_len(dims: &MlpDims) -> usize {
+    dims.in_dim * dims.hidden + dims.hidden + dims.hidden * dims.classes + dims.classes
 }
 
-fn split_params(dims: &MlpDims, params: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+/// Borrowed views into the flat parameter vector (no copies — the
+/// reference path used to `to_vec` all four segments on every call).
+fn split_params<'a>(
+    dims: &MlpDims,
+    params: &'a [f32],
+) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
     let (w1, rest) = params.split_at(dims.in_dim * dims.hidden);
     let (b1, rest) = rest.split_at(dims.hidden);
     let (w2, b2) = rest.split_at(dims.hidden * dims.classes);
-    (w1.to_vec(), b1.to_vec(), w2.to_vec(), b2.to_vec())
-}
-
-fn forward(dims: &MlpDims, params: &[f32], x: &[f32], y: &[i32]) -> Result<Forward> {
-    let (w1, b1, w2, b2) = split_params(dims, params);
-    let (bsz, h_dim, c_dim) = (dims.batch, dims.hidden, dims.classes);
-    let mut h_pre = Mat::zeros(bsz, h_dim);
-    let mut h = Mat::zeros(bsz, h_dim);
-    let mut probs = Mat::zeros(bsz, c_dim);
-    let mut loss = 0.0f64;
-    let mut correct = 0u64;
-    for i in 0..bsz {
-        let label = y[i];
-        if label < 0 || label as usize >= c_dim {
-            bail!("label {label} out of range [0, {c_dim})");
-        }
-        let xi = &x[i * dims.in_dim..(i + 1) * dims.in_dim];
-        let hp = h_pre.row_mut(i);
-        hp.copy_from_slice(&b1);
-        for (&xv, w1_row) in xi.iter().zip(w1.chunks(h_dim)) {
-            for (o, &w) in hp.iter_mut().zip(w1_row) {
-                *o += xv * w;
-            }
-        }
-        let hr = h.row_mut(i);
-        for (a, &p) in hr.iter_mut().zip(h_pre.row(i)) {
-            *a = p.max(0.0);
-        }
-        let mut logits = b2.clone();
-        for (&hv, w2_row) in h.row(i).iter().zip(w2.chunks(c_dim)) {
-            for (o, &w) in logits.iter_mut().zip(w2_row) {
-                *o += hv * w;
-            }
-        }
-        // numerically stable softmax cross-entropy
-        let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-        let sum_exp: f64 = logits.iter().map(|&v| f64::from(v - m).exp()).sum();
-        let lse = f64::from(m) + sum_exp.ln();
-        loss += lse - f64::from(logits[label as usize]);
-        let mut argmax = 0usize;
-        for (c, (pv, &lv)) in probs.row_mut(i).iter_mut().zip(&logits).enumerate() {
-            *pv = (f64::from(lv) - lse).exp() as f32;
-            if lv > logits[argmax] {
-                argmax = c;
-            }
-        }
-        if argmax == label as usize {
-            correct += 1;
-        }
-    }
-    Ok(Forward {
-        h_pre,
-        h,
-        probs,
-        loss: loss / bsz as f64,
-        acc: correct as f64 / bsz as f64,
-    })
-}
-
-/// Backward pass. FQT variants pass `Some((quantizer, bits))`, which
-/// quantizes the logit-gradient and hidden-gradient matrices with SR
-/// (unbiased, per Theorem 1). Returns the flat gradient in parameter
-/// layout plus the (post-relu-mask, pre-quantization) hidden gradient —
-/// the actgrad tap.
-fn backward(
-    dims: &MlpDims,
-    params: &[f32],
-    x: &[f32],
-    fwd: &Forward,
-    y: &[i32],
-    quant: Option<(GradQuantizer, f32)>,
-    rng: &mut Pcg32,
-) -> (Vec<f32>, Mat) {
-    let (bsz, d_dim, h_dim, c_dim) = (dims.batch, dims.in_dim, dims.hidden, dims.classes);
-    let (_w1, _b1, w2, _b2) = split_params(dims, params);
-
-    // G = (softmax - onehot) / batch, one sample per row.
-    let mut g = fwd.probs.clone();
-    let inv_b = 1.0 / bsz as f32;
-    for (i, &label) in y.iter().enumerate() {
-        let row = g.row_mut(i);
-        row[label as usize] -= 1.0;
-        for v in row.iter_mut() {
-            *v *= inv_b;
-        }
-    }
-    let g = match quant {
-        Some((q, bits)) => q.apply(&g, bits, rng),
-        None => g,
-    };
-
-    let mut dw2 = vec![0.0f32; h_dim * c_dim];
-    let mut db2 = vec![0.0f32; c_dim];
-    let mut g_a = Mat::zeros(bsz, h_dim);
-    for i in 0..bsz {
-        let gi = g.row(i);
-        for (&hv, dw2_row) in fwd.h.row(i).iter().zip(dw2.chunks_mut(c_dim)) {
-            for (o, &gv) in dw2_row.iter_mut().zip(gi) {
-                *o += hv * gv;
-            }
-        }
-        for (o, &gv) in db2.iter_mut().zip(gi) {
-            *o += gv;
-        }
-        for (o, w2_row) in g_a.row_mut(i).iter_mut().zip(w2.chunks(c_dim)) {
-            *o = w2_row.iter().zip(gi).map(|(&w, &gv)| w * gv).sum();
-        }
-    }
-
-    // relu mask at the tap
-    let mut g_h = g_a;
-    for (v, &p) in g_h.data.iter_mut().zip(&fwd.h_pre.data) {
-        if p <= 0.0 {
-            *v = 0.0;
-        }
-    }
-    let g_hq = match quant {
-        Some((q, bits)) => q.apply(&g_h, bits, rng),
-        None => g_h.clone(),
-    };
-
-    let mut dw1 = vec![0.0f32; d_dim * h_dim];
-    let mut db1 = vec![0.0f32; h_dim];
-    for i in 0..bsz {
-        let gi = g_hq.row(i);
-        let xi = &x[i * d_dim..(i + 1) * d_dim];
-        for (&xv, dw1_row) in xi.iter().zip(dw1.chunks_mut(h_dim)) {
-            for (o, &gv) in dw1_row.iter_mut().zip(gi) {
-                *o += xv * gv;
-            }
-        }
-        for (o, &gv) in db1.iter_mut().zip(gi) {
-            *o += gv;
-        }
-    }
-
-    let mut grad = Vec::with_capacity(dims_len(dims));
-    grad.extend_from_slice(&dw1);
-    grad.extend_from_slice(&db1);
-    grad.extend_from_slice(&dw2);
-    grad.extend_from_slice(&db2);
-    (grad, g_h)
-}
-
-fn dims_len(dims: &MlpDims) -> usize {
-    dims.in_dim * dims.hidden + dims.hidden + dims.hidden * dims.classes + dims.classes
+    (w1, b1, w2, b2)
 }
 
 fn quantizer_for(variant: &str) -> Result<Option<GradQuantizer>> {
@@ -297,15 +163,39 @@ fn quantizer_for(variant: &str) -> Result<Option<GradQuantizer>> {
     }
 }
 
-fn scalar_f32(t: &HostTensor) -> Result<f32> {
-    Ok(t.as_f32()?[0])
+/// Extract the single element of a scalar f32 lane, naming the lane in
+/// the error — an empty or multi-element tensor used to panic on `[0]`.
+fn scalar_f32(t: &HostTensor, lane: &str) -> Result<f32> {
+    let v = t.as_f32()?;
+    match v {
+        [x] => Ok(*x),
+        _ => bail!(
+            "expected a scalar f32 tensor for `{lane}`, got {} elements",
+            v.len()
+        ),
+    }
 }
 
-fn labels(t: &HostTensor) -> Result<&[i32]> {
+/// Validate the label lane: int32 with exactly `batch` entries.
+fn labels<'a>(t: &'a HostTensor, batch: usize) -> Result<&'a [i32]> {
     match t {
-        HostTensor::I32(v) => Ok(v),
-        HostTensor::F32(_) => bail!("expected int32 labels"),
+        HostTensor::I32(v) if v.len() == batch => Ok(v),
+        HostTensor::I32(v) => bail!("expected {batch} int32 labels, got {}", v.len()),
+        HostTensor::F32(_) => bail!("expected int32 labels, got an f32 tensor"),
     }
+}
+
+fn check_x(dims: &MlpDims, x: &[f32]) -> Result<()> {
+    let want = dims.batch * dims.in_dim;
+    if x.len() != want {
+        bail!(
+            "input x has {} elements, expected batch {} x in_dim {}",
+            x.len(),
+            dims.batch,
+            dims.in_dim
+        );
+    }
+    Ok(())
 }
 
 /// The seed lane is a *bit-pattern carrier*: callers may pack a full u32
@@ -316,106 +206,668 @@ fn seed_rng(seed: f32) -> Pcg32 {
     Pcg32::new(u64::from(seed.to_bits()), 1013)
 }
 
-/// Stateless interpreter for the `mlp` artifacts. One instance per
-/// [`Executor`](super::Executor); dispatch is on the artifact metadata.
-pub struct NativeExecutor;
+// ---------------------------------------------------------------------
+// Workspace arena (blocked path)
+// ---------------------------------------------------------------------
 
-impl ExecutorBackend for NativeExecutor {
-    fn name(&self) -> &'static str {
-        "native"
-    }
+struct WsMetrics {
+    flops: Counter,
+    grows: Counter,
+    bytes: Gauge,
+}
 
-    fn execute(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<StepOutputs> {
-        let dims = MlpDims::infer(meta)?;
-        match meta.step {
-            StepKind::Train => train_step(meta, &dims, inputs),
-            StepKind::Probe => probe_step(meta, &dims, inputs),
-            StepKind::Eval => eval_step(&dims, inputs),
-            StepKind::ActGrad => actgrad_step(&dims, inputs),
+/// Reusable per-thread buffers for the blocked step path. `resize` never
+/// shrinks a `Vec`'s capacity, so after the first step at a given
+/// geometry every `prepare` call is allocation-free; the grow counter
+/// below stays flat once the arena is warm (geometry churn shows up as
+/// increments).
+#[derive(Default)]
+struct Workspace {
+    h_pre: Vec<f32>,
+    h: Vec<f32>,
+    logits: Mat,
+    probs: Mat,
+    g: Mat,
+    gq: Mat,
+    g_h: Mat,
+    g_hq: Mat,
+    w2t: Vec<f32>,
+    grad: Vec<f32>,
+    scratch: FusedScratch,
+    high_water: usize,
+    metrics: Option<WsMetrics>,
+}
+
+impl Workspace {
+    fn prepare(&mut self, dims: &MlpDims) {
+        let (b, h, c) = (dims.batch, dims.hidden, dims.classes);
+        self.h_pre.resize(b * h, 0.0);
+        self.h.resize(b * h, 0.0);
+        self.logits.resize(b, c);
+        self.probs.resize(b, c);
+        self.g.resize(b, c);
+        self.gq.resize(b, c);
+        self.g_h.resize(b, h);
+        self.g_hq.resize(b, h);
+        self.w2t.resize(h * c, 0.0);
+        self.grad.resize(dims_len(dims), 0.0);
+        if self.metrics.is_none() && crate::obs::enabled() {
+            let m = crate::obs::metrics();
+            self.metrics = Some(WsMetrics {
+                flops: m.counter(
+                    "native_kernel_flops_total",
+                    "f32 FLOPs executed by the blocked native kernel layer",
+                ),
+                grows: m.counter(
+                    "native_ws_grow_total",
+                    "workspace arena growth events (should stay flat once warm; \
+                     increments mean geometry churn is re-allocating)",
+                ),
+                bytes: m.gauge(
+                    "native_ws_bytes",
+                    "per-thread native workspace high-water size in bytes",
+                ),
+            });
+        }
+        let need = 4 * b * h + 4 * b * c + h * c + dims_len(dims);
+        if need > self.high_water {
+            self.high_water = need;
+            if let Some(m) = &self.metrics {
+                m.grows.inc();
+                m.bytes.set((need * std::mem::size_of::<f32>()) as f64);
+            }
         }
     }
+}
+
+thread_local! {
+    /// `NativeExecutor::execute` takes `&self` and runs concurrently on
+    /// the data-parallel pool threads, so the arena is per thread rather
+    /// than per executor.
+    static WORKSPACE: RefCell<Workspace> = RefCell::new(Workspace::default());
+}
+
+fn forward_flops(dims: &MlpDims) -> u64 {
+    let (b, d, h, c) = (
+        dims.batch as u64,
+        dims.in_dim as u64,
+        dims.hidden as u64,
+        dims.classes as u64,
+    );
+    2 * b * (d * h + h * c)
+}
+
+fn backward_flops(dims: &MlpDims) -> u64 {
+    let (b, d, h, c) = (
+        dims.batch as u64,
+        dims.in_dim as u64,
+        dims.hidden as u64,
+        dims.classes as u64,
+    );
+    // dW2 (b·h·c) + g_a (b·c·h) + dW1 (b·d·h) multiply-adds
+    2 * b * (d * h + 2 * h * c)
+}
+
+// ---------------------------------------------------------------------
+// Blocked step path (default)
+// ---------------------------------------------------------------------
+
+/// Whole-batch forward through the blocked kernels, writing into the
+/// workspace. Returns (mean loss, accuracy). Arithmetic is element-for-
+/// element identical to `reference::forward`: the GEMMs preserve the
+/// per-element accumulation order and the softmax loop is unchanged.
+fn forward_blocked(
+    dims: &MlpDims,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    ws: &mut Workspace,
+) -> Result<(f64, f64)> {
+    let (w1, b1, w2, b2) = split_params(dims, params);
+    let (bsz, h_dim, c_dim) = (dims.batch, dims.hidden, dims.classes);
+    kernels::gemm(&mut ws.h_pre, Init::Bias(b1), x, w1, bsz, dims.in_dim, h_dim);
+    kernels::relu(&mut ws.h, &ws.h_pre);
+    kernels::gemm(&mut ws.logits.data, Init::Bias(b2), &ws.h, w2, bsz, h_dim, c_dim);
+
+    // numerically stable softmax cross-entropy (kept separate from the
+    // probs buffer: the argmax scan reads earlier logits while writing)
+    let mut loss = 0.0f64;
+    let mut correct = 0u64;
+    for (i, &label) in y.iter().enumerate() {
+        if label < 0 || label as usize >= c_dim {
+            bail!("label {label} out of range [0, {c_dim})");
+        }
+        let logits = ws.logits.row(i);
+        let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let sum_exp: f64 = logits.iter().map(|&v| f64::from(v - m).exp()).sum();
+        let lse = f64::from(m) + sum_exp.ln();
+        loss += lse - f64::from(logits[label as usize]);
+        let mut argmax = 0usize;
+        for (c, (pv, &lv)) in ws.probs.row_mut(i).iter_mut().zip(logits).enumerate() {
+            *pv = (f64::from(lv) - lse).exp() as f32;
+            if lv > logits[argmax] {
+                argmax = c;
+            }
+        }
+        if argmax == label as usize {
+            correct += 1;
+        }
+    }
+    Ok((loss / bsz as f64, correct as f64 / bsz as f64))
+}
+
+/// Whole-batch backward through the blocked kernels. Consumes the
+/// forward intermediates in the workspace and leaves the flat gradient
+/// in `ws.grad` (parameter layout) and the actgrad tap in `ws.g_h`.
+/// FQT variants run the quantizers' fused `apply_into` paths — same
+/// math, same RNG draw order, zero allocation once warm.
+fn backward_blocked(
+    dims: &MlpDims,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    quant: Option<(GradQuantizer, f32)>,
+    rng: &mut Pcg32,
+    ws: &mut Workspace,
+) {
+    let (_w1, _b1, w2, _b2) = split_params(dims, params);
+    let (bsz, d_dim, h_dim, c_dim) = (dims.batch, dims.in_dim, dims.hidden, dims.classes);
+
+    // G = (softmax - onehot) / batch, one sample per row.
+    ws.g.data.copy_from_slice(&ws.probs.data);
+    let inv_b = 1.0 / bsz as f32;
+    for (i, &label) in y.iter().enumerate() {
+        let row = ws.g.row_mut(i);
+        row[label as usize] -= 1.0;
+        for v in row.iter_mut() {
+            *v *= inv_b;
+        }
+    }
+    let g: &Mat = match quant {
+        Some((q, bits)) => {
+            q.apply_into(&ws.g, bits, rng, &mut ws.scratch, &mut ws.gq);
+            &ws.gq
+        }
+        None => &ws.g,
+    };
+
+    let (dw1, rest) = ws.grad.split_at_mut(d_dim * h_dim);
+    let (db1, rest) = rest.split_at_mut(h_dim);
+    let (dw2, db2) = rest.split_at_mut(h_dim * c_dim);
+
+    kernels::gemm_at_b(dw2, Init::Zero, &ws.h, &g.data, bsz, h_dim, c_dim);
+    kernels::col_sums(db2, &g.data, c_dim);
+
+    // g_a = G · W2ᵀ: materializing W2ᵀ keeps the contraction in the
+    // ascending-k accumulation order of the reference dot products.
+    kernels::transpose(&mut ws.w2t, w2, h_dim, c_dim);
+    kernels::gemm(&mut ws.g_h.data, Init::Zero, &g.data, &ws.w2t, bsz, c_dim, h_dim);
+
+    // relu mask at the tap
+    kernels::relu_mask(&mut ws.g_h.data, &ws.h_pre);
+    let gh: &Mat = match quant {
+        Some((q, bits)) => {
+            q.apply_into(&ws.g_h, bits, rng, &mut ws.scratch, &mut ws.g_hq);
+            &ws.g_hq
+        }
+        None => &ws.g_h,
+    };
+
+    kernels::gemm_at_b(dw1, Init::Zero, x, &gh.data, bsz, d_dim, h_dim);
+    kernels::col_sums(db1, &gh.data, h_dim);
 }
 
 /// (params, momentum, x, y, seed, lr, bits) -> (params', momentum', loss, acc)
 fn train_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
     let params = inputs[0].as_f32()?;
-    let mut velocity = inputs[1].as_f32()?.to_vec();
+    let velocity = inputs[1].as_f32()?;
     let x = inputs[2].as_f32()?;
-    let y = labels(&inputs[3])?;
-    let seed = scalar_f32(&inputs[4])?;
-    let lr = f64::from(scalar_f32(&inputs[5])?);
-    let bits = scalar_f32(&inputs[6])?;
-
-    let fwd = {
-        let _sp = crate::obs::span("native/forward");
-        forward(dims, params, x, y)?
-    };
+    let y = labels(&inputs[3], dims.batch)?;
+    let seed = scalar_f32(&inputs[4], "seed")?;
+    let lr = f64::from(scalar_f32(&inputs[5], "lr")?);
+    let bits = scalar_f32(&inputs[6], "bits")?;
+    check_x(dims, x)?;
     let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
-    let mut rng = seed_rng(seed);
-    let (grad, _) = {
-        let _sp = crate::obs::span("native/backward");
-        backward(dims, params, x, &fwd, y, quant, &mut rng)
-    };
 
-    let mu = meta.momentum;
-    let mut new_params = params.to_vec();
-    for ((pv, vv), &g) in new_params.iter_mut().zip(velocity.iter_mut()).zip(&grad) {
-        *vv = (mu * f64::from(*vv) + f64::from(g)) as f32;
-        *pv = (f64::from(*pv) - lr * f64::from(*vv)) as f32;
-    }
-    Ok(vec![
-        HostTensor::F32(new_params),
-        HostTensor::F32(velocity),
-        HostTensor::F32(vec![fwd.loss as f32]),
-        HostTensor::F32(vec![fwd.acc as f32]),
-    ])
+    WORKSPACE.with(|cell| {
+        let ws = &mut *cell.borrow_mut();
+        ws.prepare(dims);
+        let (loss, acc) = {
+            let _sp = crate::obs::span("native/forward");
+            forward_blocked(dims, params, x, y, ws)?
+        };
+        let mut rng = seed_rng(seed);
+        {
+            let _sp = crate::obs::span("native/backward");
+            backward_blocked(dims, params, x, y, quant, &mut rng, ws);
+        }
+        if let Some(m) = &ws.metrics {
+            m.flops.add(forward_flops(dims) + backward_flops(dims));
+        }
+
+        let mu = meta.momentum;
+        let mut new_params = params.to_vec();
+        let mut new_velocity = velocity.to_vec();
+        for ((pv, vv), &g) in new_params
+            .iter_mut()
+            .zip(new_velocity.iter_mut())
+            .zip(&ws.grad)
+        {
+            *vv = (mu * f64::from(*vv) + f64::from(g)) as f32;
+            *pv = (f64::from(*pv) - lr * f64::from(*vv)) as f32;
+        }
+        Ok(vec![
+            HostTensor::F32(new_params),
+            HostTensor::F32(new_velocity),
+            HostTensor::F32(vec![loss as f32]),
+            HostTensor::F32(vec![acc as f32]),
+        ])
+    })
 }
 
 /// (params, x, y, seed, bits) -> (loss, flat_grad)
 fn probe_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
     let params = inputs[0].as_f32()?;
     let x = inputs[1].as_f32()?;
-    let y = labels(&inputs[2])?;
-    let seed = scalar_f32(&inputs[3])?;
-    let bits = scalar_f32(&inputs[4])?;
-
-    let fwd = {
-        let _sp = crate::obs::span("native/forward");
-        forward(dims, params, x, y)?
-    };
+    let y = labels(&inputs[2], dims.batch)?;
+    let seed = scalar_f32(&inputs[3], "seed")?;
+    let bits = scalar_f32(&inputs[4], "bits")?;
+    check_x(dims, x)?;
     let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
-    let mut rng = seed_rng(seed);
-    let (grad, _) = {
-        let _sp = crate::obs::span("native/backward");
-        backward(dims, params, x, &fwd, y, quant, &mut rng)
-    };
-    Ok(vec![
-        HostTensor::F32(vec![fwd.loss as f32]),
-        HostTensor::F32(grad),
-    ])
+
+    WORKSPACE.with(|cell| {
+        let ws = &mut *cell.borrow_mut();
+        ws.prepare(dims);
+        let (loss, _acc) = {
+            let _sp = crate::obs::span("native/forward");
+            forward_blocked(dims, params, x, y, ws)?
+        };
+        let mut rng = seed_rng(seed);
+        {
+            let _sp = crate::obs::span("native/backward");
+            backward_blocked(dims, params, x, y, quant, &mut rng, ws);
+        }
+        if let Some(m) = &ws.metrics {
+            m.flops.add(forward_flops(dims) + backward_flops(dims));
+        }
+        Ok(vec![
+            HostTensor::F32(vec![loss as f32]),
+            HostTensor::F32(ws.grad.clone()),
+        ])
+    })
 }
 
 /// (params, x, y) -> (loss, acc) — deterministic.
 fn eval_step(dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
     let params = inputs[0].as_f32()?;
     let x = inputs[1].as_f32()?;
-    let y = labels(&inputs[2])?;
-    let fwd = forward(dims, params, x, y)?;
-    Ok(vec![
-        HostTensor::F32(vec![fwd.loss as f32]),
-        HostTensor::F32(vec![fwd.acc as f32]),
-    ])
+    let y = labels(&inputs[2], dims.batch)?;
+    check_x(dims, x)?;
+    WORKSPACE.with(|cell| {
+        let ws = &mut *cell.borrow_mut();
+        ws.prepare(dims);
+        let (loss, acc) = forward_blocked(dims, params, x, y, ws)?;
+        if let Some(m) = &ws.metrics {
+            m.flops.add(forward_flops(dims));
+        }
+        Ok(vec![
+            HostTensor::F32(vec![loss as f32]),
+            HostTensor::F32(vec![acc as f32]),
+        ])
+    })
 }
 
 /// (params, x, y, seed) -> hidden-layer gradient tap (batch x hidden).
 fn actgrad_step(dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
     let params = inputs[0].as_f32()?;
     let x = inputs[1].as_f32()?;
-    let y = labels(&inputs[2])?;
-    let fwd = forward(dims, params, x, y)?;
-    let mut rng = seed_rng(scalar_f32(&inputs[3])?);
-    let (_, g_h) = backward(dims, params, x, &fwd, y, None, &mut rng);
-    Ok(vec![HostTensor::F32(g_h.data)])
+    let y = labels(&inputs[2], dims.batch)?;
+    let seed = scalar_f32(&inputs[3], "seed")?;
+    check_x(dims, x)?;
+    WORKSPACE.with(|cell| {
+        let ws = &mut *cell.borrow_mut();
+        ws.prepare(dims);
+        forward_blocked(dims, params, x, y, ws)?;
+        let mut rng = seed_rng(seed);
+        backward_blocked(dims, params, x, y, None, &mut rng, ws);
+        if let Some(m) = &ws.metrics {
+            m.flops.add(forward_flops(dims) + backward_flops(dims));
+        }
+        Ok(vec![HostTensor::F32(ws.g_h.data.clone())])
+    })
+}
+
+// ---------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------
+
+/// Which implementation of the step math to run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Cache-blocked batched kernels + workspace arena (the default).
+    #[default]
+    Blocked,
+    /// The retained per-sample interpreter — the golden reference the
+    /// parity tests and the `native_step_speedup` bench compare against.
+    Reference,
+}
+
+/// Stateless interpreter for the `mlp` artifacts. One instance per
+/// [`Executor`](super::Executor); dispatch is on the artifact metadata.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeExecutor {
+    path: KernelPath,
+}
+
+impl NativeExecutor {
+    pub fn new(path: KernelPath) -> Self {
+        Self { path }
+    }
+
+    /// The golden-reference (pre-kernel-layer) interpreter.
+    pub fn reference() -> Self {
+        Self::new(KernelPath::Reference)
+    }
+}
+
+impl ExecutorBackend for NativeExecutor {
+    fn name(&self) -> &'static str {
+        match self.path {
+            KernelPath::Blocked => "native",
+            KernelPath::Reference => "native-reference",
+        }
+    }
+
+    fn execute(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<StepOutputs> {
+        let dims = MlpDims::infer(meta)?;
+        match self.path {
+            KernelPath::Blocked => match meta.step {
+                StepKind::Train => train_step(meta, &dims, inputs),
+                StepKind::Probe => probe_step(meta, &dims, inputs),
+                StepKind::Eval => eval_step(&dims, inputs),
+                StepKind::ActGrad => actgrad_step(&dims, inputs),
+            },
+            KernelPath::Reference => match meta.step {
+                StepKind::Train => reference::train_step(meta, &dims, inputs),
+                StepKind::Probe => reference::probe_step(meta, &dims, inputs),
+                StepKind::Eval => reference::eval_step(&dims, inputs),
+                StepKind::ActGrad => reference::actgrad_step(&dims, inputs),
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference step path
+// ---------------------------------------------------------------------
+
+/// The original per-sample interpreter, kept as the golden reference for
+/// the blocked kernel path: allocating `split_params` copies, per-sample
+/// triple loops, and the allocating quantizer `apply`. The parity
+/// harness holds the two paths bitwise equal; the train-step bench
+/// reports their latency ratio as `native_step_speedup`.
+mod reference {
+    use super::*;
+
+    /// Cached intermediates of one forward pass.
+    pub(super) struct Forward {
+        /// Pre-activation of the hidden layer (batch x hidden) — the relu
+        /// mask for the backward pass and the activation-gradient tap.
+        pub(super) h_pre: Mat,
+        /// Post-relu hidden activations (batch x hidden).
+        pub(super) h: Mat,
+        /// Softmax probabilities (batch x classes).
+        pub(super) probs: Mat,
+        pub(super) loss: f64,
+        pub(super) acc: f64,
+    }
+
+    fn split_params(dims: &MlpDims, params: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (w1, rest) = params.split_at(dims.in_dim * dims.hidden);
+        let (b1, rest) = rest.split_at(dims.hidden);
+        let (w2, b2) = rest.split_at(dims.hidden * dims.classes);
+        (w1.to_vec(), b1.to_vec(), w2.to_vec(), b2.to_vec())
+    }
+
+    pub(super) fn forward(
+        dims: &MlpDims,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<Forward> {
+        let (w1, b1, w2, b2) = split_params(dims, params);
+        let (bsz, h_dim, c_dim) = (dims.batch, dims.hidden, dims.classes);
+        let mut h_pre = Mat::zeros(bsz, h_dim);
+        let mut h = Mat::zeros(bsz, h_dim);
+        let mut probs = Mat::zeros(bsz, c_dim);
+        let mut loss = 0.0f64;
+        let mut correct = 0u64;
+        for i in 0..bsz {
+            let label = y[i];
+            if label < 0 || label as usize >= c_dim {
+                bail!("label {label} out of range [0, {c_dim})");
+            }
+            let xi = &x[i * dims.in_dim..(i + 1) * dims.in_dim];
+            let hp = h_pre.row_mut(i);
+            hp.copy_from_slice(&b1);
+            for (&xv, w1_row) in xi.iter().zip(w1.chunks(h_dim)) {
+                for (o, &w) in hp.iter_mut().zip(w1_row) {
+                    *o += xv * w;
+                }
+            }
+            let hr = h.row_mut(i);
+            for (a, &p) in hr.iter_mut().zip(h_pre.row(i)) {
+                *a = p.max(0.0);
+            }
+            let mut logits = b2.clone();
+            for (&hv, w2_row) in h.row(i).iter().zip(w2.chunks(c_dim)) {
+                for (o, &w) in logits.iter_mut().zip(w2_row) {
+                    *o += hv * w;
+                }
+            }
+            // numerically stable softmax cross-entropy
+            let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let sum_exp: f64 = logits.iter().map(|&v| f64::from(v - m).exp()).sum();
+            let lse = f64::from(m) + sum_exp.ln();
+            loss += lse - f64::from(logits[label as usize]);
+            let mut argmax = 0usize;
+            for (c, (pv, &lv)) in probs.row_mut(i).iter_mut().zip(&logits).enumerate() {
+                *pv = (f64::from(lv) - lse).exp() as f32;
+                if lv > logits[argmax] {
+                    argmax = c;
+                }
+            }
+            if argmax == label as usize {
+                correct += 1;
+            }
+        }
+        Ok(Forward {
+            h_pre,
+            h,
+            probs,
+            loss: loss / bsz as f64,
+            acc: correct as f64 / bsz as f64,
+        })
+    }
+
+    /// Backward pass. FQT variants pass `Some((quantizer, bits))`, which
+    /// quantizes the logit-gradient and hidden-gradient matrices with SR
+    /// (unbiased, per Theorem 1). Returns the flat gradient in parameter
+    /// layout plus the (post-relu-mask, pre-quantization) hidden
+    /// gradient — the actgrad tap.
+    pub(super) fn backward(
+        dims: &MlpDims,
+        params: &[f32],
+        x: &[f32],
+        fwd: &Forward,
+        y: &[i32],
+        quant: Option<(GradQuantizer, f32)>,
+        rng: &mut Pcg32,
+    ) -> (Vec<f32>, Mat) {
+        let (bsz, d_dim, h_dim, c_dim) = (dims.batch, dims.in_dim, dims.hidden, dims.classes);
+        let (_w1, _b1, w2, _b2) = split_params(dims, params);
+
+        // G = (softmax - onehot) / batch, one sample per row.
+        let mut g = fwd.probs.clone();
+        let inv_b = 1.0 / bsz as f32;
+        for (i, &label) in y.iter().enumerate() {
+            let row = g.row_mut(i);
+            row[label as usize] -= 1.0;
+            for v in row.iter_mut() {
+                *v *= inv_b;
+            }
+        }
+        let g = match quant {
+            Some((q, bits)) => q.apply(&g, bits, rng),
+            None => g,
+        };
+
+        let mut dw2 = vec![0.0f32; h_dim * c_dim];
+        let mut db2 = vec![0.0f32; c_dim];
+        let mut g_a = Mat::zeros(bsz, h_dim);
+        for i in 0..bsz {
+            let gi = g.row(i);
+            for (&hv, dw2_row) in fwd.h.row(i).iter().zip(dw2.chunks_mut(c_dim)) {
+                for (o, &gv) in dw2_row.iter_mut().zip(gi) {
+                    *o += hv * gv;
+                }
+            }
+            for (o, &gv) in db2.iter_mut().zip(gi) {
+                *o += gv;
+            }
+            for (o, w2_row) in g_a.row_mut(i).iter_mut().zip(w2.chunks(c_dim)) {
+                *o = w2_row.iter().zip(gi).map(|(&w, &gv)| w * gv).sum();
+            }
+        }
+
+        // relu mask at the tap
+        let mut g_h = g_a;
+        for (v, &p) in g_h.data.iter_mut().zip(&fwd.h_pre.data) {
+            if p <= 0.0 {
+                *v = 0.0;
+            }
+        }
+        let g_hq = match quant {
+            Some((q, bits)) => q.apply(&g_h, bits, rng),
+            None => g_h.clone(),
+        };
+
+        let mut dw1 = vec![0.0f32; d_dim * h_dim];
+        let mut db1 = vec![0.0f32; h_dim];
+        for i in 0..bsz {
+            let gi = g_hq.row(i);
+            let xi = &x[i * d_dim..(i + 1) * d_dim];
+            for (&xv, dw1_row) in xi.iter().zip(dw1.chunks_mut(h_dim)) {
+                for (o, &gv) in dw1_row.iter_mut().zip(gi) {
+                    *o += xv * gv;
+                }
+            }
+            for (o, &gv) in db1.iter_mut().zip(gi) {
+                *o += gv;
+            }
+        }
+
+        let mut grad = Vec::with_capacity(dims_len(dims));
+        grad.extend_from_slice(&dw1);
+        grad.extend_from_slice(&db1);
+        grad.extend_from_slice(&dw2);
+        grad.extend_from_slice(&db2);
+        (grad, g_h)
+    }
+
+    /// (params, momentum, x, y, seed, lr, bits) -> (params', momentum', loss, acc)
+    pub(super) fn train_step(
+        meta: &ArtifactMeta,
+        dims: &MlpDims,
+        inputs: &[HostTensor],
+    ) -> Result<StepOutputs> {
+        let params = inputs[0].as_f32()?;
+        let mut velocity = inputs[1].as_f32()?.to_vec();
+        let x = inputs[2].as_f32()?;
+        let y = labels(&inputs[3], dims.batch)?;
+        let seed = scalar_f32(&inputs[4], "seed")?;
+        let lr = f64::from(scalar_f32(&inputs[5], "lr")?);
+        let bits = scalar_f32(&inputs[6], "bits")?;
+        check_x(dims, x)?;
+
+        let fwd = {
+            let _sp = crate::obs::span("native/forward");
+            forward(dims, params, x, y)?
+        };
+        let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
+        let mut rng = seed_rng(seed);
+        let (grad, _) = {
+            let _sp = crate::obs::span("native/backward");
+            backward(dims, params, x, &fwd, y, quant, &mut rng)
+        };
+
+        let mu = meta.momentum;
+        let mut new_params = params.to_vec();
+        for ((pv, vv), &g) in new_params.iter_mut().zip(velocity.iter_mut()).zip(&grad) {
+            *vv = (mu * f64::from(*vv) + f64::from(g)) as f32;
+            *pv = (f64::from(*pv) - lr * f64::from(*vv)) as f32;
+        }
+        Ok(vec![
+            HostTensor::F32(new_params),
+            HostTensor::F32(velocity),
+            HostTensor::F32(vec![fwd.loss as f32]),
+            HostTensor::F32(vec![fwd.acc as f32]),
+        ])
+    }
+
+    /// (params, x, y, seed, bits) -> (loss, flat_grad)
+    pub(super) fn probe_step(
+        meta: &ArtifactMeta,
+        dims: &MlpDims,
+        inputs: &[HostTensor],
+    ) -> Result<StepOutputs> {
+        let params = inputs[0].as_f32()?;
+        let x = inputs[1].as_f32()?;
+        let y = labels(&inputs[2], dims.batch)?;
+        let seed = scalar_f32(&inputs[3], "seed")?;
+        let bits = scalar_f32(&inputs[4], "bits")?;
+        check_x(dims, x)?;
+
+        let fwd = {
+            let _sp = crate::obs::span("native/forward");
+            forward(dims, params, x, y)?
+        };
+        let quant = quantizer_for(&meta.variant)?.map(|q| (q, bits));
+        let mut rng = seed_rng(seed);
+        let (grad, _) = {
+            let _sp = crate::obs::span("native/backward");
+            backward(dims, params, x, &fwd, y, quant, &mut rng)
+        };
+        Ok(vec![
+            HostTensor::F32(vec![fwd.loss as f32]),
+            HostTensor::F32(grad),
+        ])
+    }
+
+    /// (params, x, y) -> (loss, acc) — deterministic.
+    pub(super) fn eval_step(dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+        let params = inputs[0].as_f32()?;
+        let x = inputs[1].as_f32()?;
+        let y = labels(&inputs[2], dims.batch)?;
+        check_x(dims, x)?;
+        let fwd = forward(dims, params, x, y)?;
+        Ok(vec![
+            HostTensor::F32(vec![fwd.loss as f32]),
+            HostTensor::F32(vec![fwd.acc as f32]),
+        ])
+    }
+
+    /// (params, x, y, seed) -> hidden-layer gradient tap (batch x hidden).
+    pub(super) fn actgrad_step(dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+        let params = inputs[0].as_f32()?;
+        let x = inputs[1].as_f32()?;
+        let y = labels(&inputs[2], dims.batch)?;
+        check_x(dims, x)?;
+        let fwd = forward(dims, params, x, y)?;
+        let mut rng = seed_rng(scalar_f32(&inputs[3], "seed")?);
+        let (_, g_h) = backward(dims, params, x, &fwd, y, None, &mut rng);
+        Ok(vec![HostTensor::F32(g_h.data)])
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -449,6 +901,26 @@ fn abi(spec: &MlpSpec, step: StepKind) -> (Vec<Json>, Vec<Json>) {
             vec![params(), xs(), ys(), scalar()],
             vec![tensor_json(&[spec.batch, spec.hidden], "float32")],
         ),
+    }
+}
+
+/// The ABI metadata [`write_artifacts`] would emit for `spec`, without
+/// touching the filesystem — the entry point the bench harness and the
+/// parity tests use to drive the backend directly.
+pub fn meta_for(spec: &MlpSpec, variant: &str, step: StepKind) -> ArtifactMeta {
+    ArtifactMeta {
+        model: "mlp".into(),
+        variant: variant.into(),
+        step,
+        n_params: spec.n_params(),
+        batch: spec.batch,
+        input_shape: vec![spec.batch, spec.in_dim],
+        input_dtype: "float32".into(),
+        inputs: vec![],
+        outputs: vec![],
+        probe_shape: vec![spec.batch, spec.hidden],
+        momentum: 0.9,
+        hlo_path: std::path::PathBuf::from("native.hlo.txt"),
     }
 }
 
@@ -542,21 +1014,7 @@ mod tests {
     }
 
     fn tiny_meta(variant: &str, step: StepKind) -> ArtifactMeta {
-        let spec = tiny_spec();
-        ArtifactMeta {
-            model: "mlp".into(),
-            variant: variant.into(),
-            step,
-            n_params: spec.n_params(),
-            batch: spec.batch,
-            input_shape: vec![spec.batch, spec.in_dim],
-            input_dtype: "float32".into(),
-            inputs: vec![],
-            outputs: vec![],
-            probe_shape: vec![spec.batch, spec.hidden],
-            momentum: 0.9,
-            hlo_path: std::path::PathBuf::from("none.hlo.txt"),
-        }
+        meta_for(&tiny_spec(), variant, step)
     }
 
     fn tiny_batch(spec: &MlpSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
@@ -599,18 +1057,18 @@ mod tests {
         let dims = MlpDims::infer(&tiny_meta("qat", StepKind::Probe)).unwrap();
         let params = init_params(&spec);
         let (x, y) = tiny_batch(&spec, 9);
-        let fwd = forward(&dims, &params, &x, &y).unwrap();
+        let fwd = reference::forward(&dims, &params, &x, &y).unwrap();
         let mut rng = Pcg32::new(0, 0);
-        let (grad, _) = backward(&dims, &params, &x, &fwd, &y, None, &mut rng);
+        let (grad, _) = reference::backward(&dims, &params, &x, &fwd, &y, None, &mut rng);
 
         let eps = 1e-2f32;
         let mut fd = vec![0.0f64; params.len()];
         for (i, slot) in fd.iter_mut().enumerate() {
             let mut p = params.clone();
             p[i] = params[i] + eps;
-            let up = forward(&dims, &p, &x, &y).unwrap().loss;
+            let up = reference::forward(&dims, &p, &x, &y).unwrap().loss;
             p[i] = params[i] - eps;
-            let dn = forward(&dims, &p, &x, &y).unwrap().loss;
+            let dn = reference::forward(&dims, &p, &x, &y).unwrap().loss;
             *slot = (up - dn) / (2.0 * f64::from(eps));
         }
         let num: f64 = fd
@@ -644,7 +1102,7 @@ mod tests {
                 HostTensor::F32(vec![seed]),
                 HostTensor::F32(vec![4.0]),
             ];
-            NativeExecutor
+            NativeExecutor::default()
                 .execute(&meta, &inputs)
                 .unwrap()
                 .pop()
@@ -663,15 +1121,15 @@ mod tests {
         let dims = MlpDims::infer(&tiny_meta("qat", StepKind::Probe)).unwrap();
         let params = init_params(&spec);
         let (x, y) = tiny_batch(&spec, 11);
-        let fwd = forward(&dims, &params, &x, &y).unwrap();
+        let fwd = reference::forward(&dims, &params, &x, &y).unwrap();
         let mut rng0 = Pcg32::new(0, 0);
-        let (g_ref, _) = backward(&dims, &params, &x, &fwd, &y, None, &mut rng0);
+        let (g_ref, _) = reference::backward(&dims, &params, &x, &fwd, &y, None, &mut rng0);
 
         let seeds = 96;
         let mut mean = vec![0.0f64; params.len()];
         for k in 0..seeds {
             let mut rng = seed_rng(k as f32);
-            let (g, _) = backward(
+            let (g, _) = reference::backward(
                 &dims,
                 &params,
                 &x,
@@ -710,7 +1168,7 @@ mod tests {
             HostTensor::F32(vec![0.1]),
             HostTensor::F32(vec![5.0]),
         ];
-        let out = NativeExecutor.execute(&meta, &inputs).unwrap();
+        let out = NativeExecutor::default().execute(&meta, &inputs).unwrap();
         assert_eq!(out.len(), 4);
         let new_params = out[0].as_f32().unwrap();
         assert_ne!(new_params, &params[..]);
@@ -718,6 +1176,85 @@ mod tests {
         assert!(loss.is_finite() && loss > 0.0);
         let acc = out[3].as_f32().unwrap()[0];
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    /// The blocked default path and the retained reference path must
+    /// produce identical bits on a quantized train step (same math, same
+    /// RNG draw order). The full matrix lives in `tests/kernel_parity.rs`.
+    #[test]
+    fn blocked_path_matches_reference_bitwise() {
+        let spec = tiny_spec();
+        let meta = tiny_meta("bhq", StepKind::Train);
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 33);
+        let inputs = [
+            HostTensor::F32(params.clone()),
+            HostTensor::F32(vec![0.0; params.len()]),
+            HostTensor::F32(x),
+            HostTensor::I32(y),
+            HostTensor::F32(vec![7.0]),
+            HostTensor::F32(vec![0.1]),
+            HostTensor::F32(vec![4.0]),
+        ];
+        let a = NativeExecutor::default().execute(&meta, &inputs).unwrap();
+        let b = NativeExecutor::reference().execute(&meta, &inputs).unwrap();
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.as_f32().unwrap(), tb.as_f32().unwrap());
+        }
+    }
+
+    /// Regression (ISSUE 9 satellite): empty or wrong-arity scalar/label
+    /// lanes must produce descriptive errors, not index panics.
+    #[test]
+    fn empty_or_wrong_arity_lanes_error_instead_of_panicking() {
+        let spec = tiny_spec();
+        let meta = tiny_meta("ptq", StepKind::Probe);
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 4);
+        for exec in [NativeExecutor::default(), NativeExecutor::reference()] {
+            // empty seed lane
+            let err = exec
+                .execute(
+                    &meta,
+                    &[
+                        HostTensor::F32(params.clone()),
+                        HostTensor::F32(x.clone()),
+                        HostTensor::I32(y.clone()),
+                        HostTensor::F32(vec![]),
+                        HostTensor::F32(vec![4.0]),
+                    ],
+                )
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("seed"), "unhelpful: {err:#}");
+            // two-element bits lane
+            let err = exec
+                .execute(
+                    &meta,
+                    &[
+                        HostTensor::F32(params.clone()),
+                        HostTensor::F32(x.clone()),
+                        HostTensor::I32(y.clone()),
+                        HostTensor::F32(vec![1.0]),
+                        HostTensor::F32(vec![4.0, 5.0]),
+                    ],
+                )
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("bits"), "unhelpful: {err:#}");
+            // short label vector
+            let err = exec
+                .execute(
+                    &meta,
+                    &[
+                        HostTensor::F32(params.clone()),
+                        HostTensor::F32(x.clone()),
+                        HostTensor::I32(vec![0]),
+                        HostTensor::F32(vec![1.0]),
+                        HostTensor::F32(vec![4.0]),
+                    ],
+                )
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("labels"), "unhelpful: {err:#}");
+        }
     }
 
     #[test]
@@ -737,7 +1274,7 @@ mod tests {
         }
         let meta = reg.meta("mlp", "qat", StepKind::Eval).unwrap().clone();
         let (x, y) = tiny_batch(&spec, 2);
-        let out = NativeExecutor
+        let out = NativeExecutor::default()
             .execute(
                 &meta,
                 &[
@@ -757,7 +1294,7 @@ mod tests {
         let meta = tiny_meta("qat", StepKind::Eval);
         let (x, _) = tiny_batch(&spec, 2);
         let bad_y = vec![spec.classes as i32; spec.batch];
-        let res = NativeExecutor.execute(
+        let res = NativeExecutor::default().execute(
             &meta,
             &[
                 HostTensor::F32(init_params(&spec)),

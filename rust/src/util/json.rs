@@ -1,4 +1,4 @@
-//! Minimal JSON codec (serde is not available offline; DESIGN.md §5 S13).
+//! Minimal JSON codec (serde is not available offline; DESIGN.md §6 S13).
 //!
 //! Parses the artifact metadata sidecars written by `python/compile/aot.py`
 //! and serializes experiment results / metrics. Supports the full JSON

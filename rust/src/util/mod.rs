@@ -2,7 +2,7 @@
 //!
 //! The offline build environment ships only the `xla` crate's dependency
 //! tree, so these standard-ecosystem pieces are implemented here as
-//! first-class, fully-tested modules (DESIGN.md §5, S13).
+//! first-class, fully-tested modules (DESIGN.md §6, S13).
 
 pub mod cli;
 pub mod json;

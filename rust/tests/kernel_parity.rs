@@ -1,0 +1,292 @@
+//! Golden-parity harness for the blocked kernel layer (DESIGN.md §5).
+//!
+//! Three layers of checks, bottom-up:
+//!
+//! 1. Blocked GEMM / GEMM-transpose match the retained naive reference
+//!    within 1e-5 relative over random M/N/K — including K = 0, M = 1,
+//!    non-multiple-of-tile sizes and K straddling the `KC` tile — and, by
+//!    the determinism contract (single accumulator per element, fixed add
+//!    order, no fma contraction), bitwise.
+//! 2. The fused quantizer hot path (`GradQuantizer::apply_into`) is
+//!    bitwise identical to the allocating `apply`, draws the same RNG
+//!    stream, honors the NaN poison contract, and reuses its scratch
+//!    safely across changing shapes.
+//! 3. The blocked native executor reproduces the per-sample reference
+//!    executor bitwise for every artifact variant and step kind, on the
+//!    default geometry and on a deliberately tile-unfriendly one. The
+//!    unquantized variants run at bits = 0, pinning the "bits=0 train
+//!    steps stay bitwise identical pre/post rewrite" requirement.
+
+use statquant::quant::{FusedScratch, GradQuantizer, Mat};
+use statquant::runtime::kernels::{self, Init};
+use statquant::runtime::{native, ExecutorBackend, HostTensor, MlpSpec, NativeExecutor, StepKind};
+use statquant::util::proptest::{check, prop_assert, Gen};
+use statquant::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// 1. Blocked kernels vs naive reference
+// ---------------------------------------------------------------------------
+
+/// Draw a dimension that stresses the tiling edges: empty, singleton, or
+/// a small non-multiple-of-`MR` size.
+fn small_dim(g: &mut Gen) -> usize {
+    match g.usize(0..=2) {
+        0 => 0,
+        1 => 1,
+        _ => g.usize(2..=9),
+    }
+}
+
+/// Like [`small_dim`] but occasionally straddling the `KC` = 128 k-tile
+/// boundary, so the outer K loop takes more than one trip.
+fn k_dim(g: &mut Gen) -> usize {
+    if g.bool(0.3) {
+        g.usize(kernels::KC - 3..=kernels::KC + 9)
+    } else {
+        small_dim(g)
+    }
+}
+
+/// Relative error against the reference value (absolute below 1.0).
+fn rel_err(got: f32, want: f32) -> f32 {
+    if got == want {
+        0.0
+    } else {
+        (got - want).abs() / want.abs().max(1.0)
+    }
+}
+
+fn compare_kernel(got: &[f32], want: &[f32], what: &str) -> Result<(), String> {
+    for (i, (&x, &w)) in got.iter().zip(want).enumerate() {
+        // the satellite tolerance band…
+        if rel_err(x, w) > 1e-5 {
+            return Err(format!("{what}: elem {i} off by > 1e-5 rel: {x} vs {w}"));
+        }
+        // …and the stronger determinism contract (DESIGN.md §5)
+        if x.to_bits() != w.to_bits() {
+            return Err(format!("{what}: elem {i} not bitwise: {x} vs {w}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_blocked_gemm_matches_naive() {
+    check(80, |g| {
+        let (m, n, k) = (small_dim(g), small_dim(g), k_dim(g));
+        let a = g.vec_normal(m * k, 1.0);
+        let b = g.vec_normal(k * n, 1.0);
+        let bias = g.vec_normal(n, 0.5);
+        let with_bias = g.bool(0.5);
+        let mut c_blk = vec![f32::NAN; m * n];
+        let mut c_ref = vec![f32::NAN; m * n];
+        if with_bias {
+            kernels::gemm(&mut c_blk, Init::Bias(&bias), &a, &b, m, k, n);
+            kernels::naive::gemm(&mut c_ref, Init::Bias(&bias), &a, &b, m, k, n);
+        } else {
+            kernels::gemm(&mut c_blk, Init::Zero, &a, &b, m, k, n);
+            kernels::naive::gemm(&mut c_ref, Init::Zero, &a, &b, m, k, n);
+        }
+        compare_kernel(&c_blk, &c_ref, &format!("gemm {m}x{k}x{n} bias={with_bias}"))
+    });
+}
+
+#[test]
+fn prop_blocked_gemm_at_b_matches_naive() {
+    check(80, |g| {
+        // m is the batch (reduction) axis here — let it get large enough
+        // to exercise both the 4-sample micro-kernel and its remainder.
+        let m = match g.usize(0..=2) {
+            0 => small_dim(g),
+            1 => g.usize(10..=30),
+            _ => g.usize(63..=67),
+        };
+        let (k, n) = (small_dim(g), small_dim(g));
+        let a = g.vec_normal(m * k, 1.0);
+        let b = g.vec_normal(m * n, 1.0);
+        let mut c_blk = vec![f32::NAN; k * n];
+        let mut c_ref = vec![f32::NAN; k * n];
+        kernels::gemm_at_b(&mut c_blk, Init::Zero, &a, &b, m, k, n);
+        kernels::naive::gemm_at_b(&mut c_ref, Init::Zero, &a, &b, m, k, n);
+        compare_kernel(&c_blk, &c_ref, &format!("gemm_at_b {m}x{k}x{n}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Fused quantizer path vs allocating path
+// ---------------------------------------------------------------------------
+
+const QUANTIZERS: [GradQuantizer; 5] = [
+    GradQuantizer::Ptq,
+    GradQuantizer::Psq,
+    GradQuantizer::Bhq,
+    GradQuantizer::Fp8,
+    GradQuantizer::Bfp,
+];
+
+fn random_gradient(g: &mut Gen, n: usize, d: usize) -> Mat {
+    let mut m = Mat::zeros(n, d);
+    for i in 0..n {
+        let scale = if i == 0 && g.bool(0.5) { 10.0 } else { g.f32(0.001..2.0) };
+        for v in m.row_mut(i) {
+            *v = g.normal() * scale;
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_fused_apply_into_matches_apply_bitwise() {
+    check(40, |g| {
+        let n = g.usize(1..=12);
+        let d = g.usize(1..=16);
+        let mut x = random_gradient(g, n, d);
+        if g.bool(0.25) {
+            // poison one element: PTQ/BHQ poison the whole tensor, PSQ
+            // just that row — either way the two paths must agree.
+            let i = g.usize(0..=n - 1);
+            let j = g.usize(0..=d - 1);
+            x.row_mut(i)[j] = f32::NAN;
+        }
+        let bits = g.usize(1..=8) as f32;
+        let stream = g.usize(0..=1_000_000) as u64;
+        let mut scratch = FusedScratch::default();
+        // deliberately stale shape: apply_into must resize, not assume
+        let mut out = Mat::zeros(1, 1);
+        for q in QUANTIZERS {
+            let mut ra = Pcg32::new(stream, 11);
+            let mut rb = Pcg32::new(stream, 11);
+            let want = q.apply(&x, bits, &mut ra);
+            q.apply_into(&x, bits, &mut rb, &mut scratch, &mut out);
+            prop_assert(
+                (out.rows, out.cols) == (want.rows, want.cols),
+                format!("{q:?}: fused shape {}x{}", out.rows, out.cols),
+            )?;
+            for (i, (a, b)) in out.data.iter().zip(&want.data).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{q:?} bits={bits}: elem {i} not bitwise: {a} vs {b}"));
+                }
+            }
+            prop_assert(
+                ra.uniform() == rb.uniform(),
+                format!("{q:?}: RNG streams diverged between apply and apply_into"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The same scratch and output buffer must serve back-to-back calls with
+/// different shapes (the data-parallel engine re-enters the executor with
+/// varying batch geometry).
+#[test]
+fn fused_scratch_is_safe_across_shape_changes() {
+    let mut scratch = FusedScratch::default();
+    let mut out = Mat::zeros(1, 1);
+    let mut gen_rng = Pcg32::new(0x5C, 0);
+    for (n, d) in [(8usize, 16usize), (3, 5), (12, 4), (1, 1), (6, 33)] {
+        let mut x = Mat::zeros(n, d);
+        for v in &mut x.data {
+            *v = gen_rng.normal();
+        }
+        for q in QUANTIZERS {
+            let mut ra = Pcg32::new(77, 8);
+            let mut rb = Pcg32::new(77, 8);
+            let want = q.apply(&x, 4.0, &mut ra);
+            q.apply_into(&x, 4.0, &mut rb, &mut scratch, &mut out);
+            assert_eq!(
+                (out.rows, out.cols),
+                (want.rows, want.cols),
+                "{q:?} {n}x{d} shape"
+            );
+            for (i, (a, b)) in out.data.iter().zip(&want.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{q:?} {n}x{d} elem {i}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Blocked executor vs per-sample reference executor
+// ---------------------------------------------------------------------------
+
+fn exec_inputs(
+    spec: &MlpSpec,
+    step: StepKind,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    bits: f32,
+) -> Vec<HostTensor> {
+    let p = || HostTensor::F32(params.to_vec());
+    let xs = || HostTensor::F32(x.to_vec());
+    let ys = || HostTensor::I32(y.to_vec());
+    let scalar = |v: f32| HostTensor::F32(vec![v]);
+    match step {
+        StepKind::Train => vec![
+            p(),
+            HostTensor::F32(vec![0.01; spec.n_params()]),
+            xs(),
+            ys(),
+            scalar(3.0),
+            scalar(0.05),
+            scalar(bits),
+        ],
+        StepKind::Probe => vec![p(), xs(), ys(), scalar(3.0), scalar(bits)],
+        StepKind::Eval => vec![p(), xs(), ys()],
+        StepKind::ActGrad => vec![p(), xs(), ys(), scalar(3.0)],
+    }
+}
+
+#[test]
+fn executor_blocked_matches_reference_bitwise_for_all_variants_and_steps() {
+    // default geometry + one that divides evenly by no tile size
+    let odd = MlpSpec {
+        in_dim: 13,
+        hidden: 7,
+        classes: 5,
+        batch: 9,
+        seed: 0xA11,
+    };
+    let blocked = NativeExecutor::default();
+    let reference = NativeExecutor::reference();
+    for spec in [MlpSpec::default(), odd] {
+        let params = native::init_params(&spec);
+        let mut rng = Pcg32::new(0x9A17, spec.batch as u64);
+        let x: Vec<f32> = (0..spec.batch * spec.in_dim).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..spec.batch)
+            .map(|_| rng.below(spec.classes as u32) as i32)
+            .collect();
+        for variant in native::VARIANTS {
+            // bits = 0 on the unquantized variants pins the "bits=0 train
+            // steps stay bitwise identical" acceptance; FQT variants get
+            // a live quantizer at 4 bits.
+            let bits = if matches!(variant, "exact" | "qat") { 0.0 } else { 4.0 };
+            for step in [
+                StepKind::Train,
+                StepKind::Probe,
+                StepKind::Eval,
+                StepKind::ActGrad,
+            ] {
+                let meta = native::meta_for(&spec, variant, step);
+                let inputs = exec_inputs(&spec, step, &params, &x, &y, bits);
+                let got = blocked.execute(&meta, &inputs).expect("blocked step");
+                let want = reference.execute(&meta, &inputs).expect("reference step");
+                let tag = format!("{variant}/{} b{}", step.name(), spec.batch);
+                assert_eq!(got.len(), want.len(), "{tag}: output arity");
+                for (o, (gt, wt)) in got.iter().zip(&want).enumerate() {
+                    let gv = gt.as_f32().expect("f32 output");
+                    let wv = wt.as_f32().expect("f32 output");
+                    assert_eq!(gv.len(), wv.len(), "{tag}: output {o} length");
+                    for (i, (a, b)) in gv.iter().zip(wv).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{tag}: output {o} elem {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
