@@ -16,7 +16,8 @@ use statquant::coordinator::{make_dataset, DataParallel, ReduceMode, Schedule, T
 use statquant::data::Dataset;
 use statquant::quant::GradQuantizer;
 use statquant::runtime::{
-    native, ExecutorBackend, HostTensor, MlpSpec, NativeExecutor, Registry, Runtime, StepKind,
+    native, ComputeMode, ExecutorBackend, HostTensor, MlpSpec, NativeExecutor, Registry, Runtime,
+    StepKind,
 };
 use statquant::util::bench::Bench;
 use statquant::util::rng::Pcg32;
@@ -27,6 +28,7 @@ fn main() {
     // native backend directly — so it runs (and BENCH_train_step.json is
     // written) even where `make artifacts` hasn't.
     bench_native_kernels(&mut b);
+    bench_int8(&mut b);
     match (Runtime::cpu(), Registry::open("artifacts")) {
         (Ok(rt), Ok(reg)) => {
             bench_trainer(&mut b, &rt, &reg);
@@ -94,6 +96,67 @@ fn bench_native_kernels(b: &mut Bench) {
         "native_step_speedup",
         "blocked-kernel native train-step speedup over the per-sample reference \
          (exact variant, default MlpSpec, median ratio)",
+    )
+    .set(headline);
+}
+
+/// Integer-code vs simulate train step on the default `MlpSpec`
+/// geometry (ISSUE 10 acceptance): `int8_step_speedup` is the PTQ
+/// bits=4 median ratio of the simulate-mode blocked step over the
+/// int8-mode blocked step; bits=8 and PSQ land as labeled gauges. Like
+/// `bench_native_kernels`, this needs no artifacts on disk, so the CI
+/// gate (`bench-check --min int8_step_speedup=1.2`) always has data.
+fn bench_int8(b: &mut Bench) {
+    let spec = MlpSpec::default();
+    let params = native::init_params(&spec);
+    let mut rng = Pcg32::new(0x1E8, 5);
+    let x: Vec<f32> = (0..spec.batch * spec.in_dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..spec.batch)
+        .map(|_| rng.below(spec.classes as u32) as i32)
+        .collect();
+    let simulate = NativeExecutor::default();
+    let int8 = NativeExecutor::default().with_compute(ComputeMode::Int8);
+    let m = statquant::obs::metrics();
+    let mut headline = 1.0f64;
+    for (variant, bits) in [("ptq", 4.0f32), ("ptq", 8.0), ("psq", 4.0)] {
+        let meta = native::meta_for(&spec, variant, StepKind::Train);
+        let inputs = [
+            HostTensor::F32(params.clone()),
+            HostTensor::F32(vec![0.0; params.len()]),
+            HostTensor::F32(x.clone()),
+            HostTensor::I32(y.clone()),
+            HostTensor::F32(vec![1.0]),
+            HostTensor::F32(vec![0.05]),
+            HostTensor::F32(vec![bits]),
+        ];
+        let simulate_ns = b
+            .run(&format!("native/simulate/{variant}_b{bits}"), 1.0, || {
+                std::hint::black_box(simulate.execute(&meta, &inputs).expect("simulate step"));
+            })
+            .median_ns;
+        let int8_ns = b
+            .run(&format!("native/int8/{variant}_b{bits}"), 1.0, || {
+                std::hint::black_box(int8.execute(&meta, &inputs).expect("int8 step"));
+            })
+            .median_ns;
+        let speedup = simulate_ns / int8_ns.max(1.0);
+        println!("int8 step speedup ({variant} @ {bits} bits): {speedup:.2}x");
+        m.gauge(
+            &statquant::obs::registry::labeled(
+                "int8_step_speedup_variant",
+                &[("variant", variant), ("bits", &format!("{bits}"))],
+            ),
+            "integer-code train-step speedup over the simulate-mode blocked step (median)",
+        )
+        .set(speedup);
+        if variant == "ptq" && bits == 4.0 {
+            headline = speedup;
+        }
+    }
+    m.gauge(
+        "int8_step_speedup",
+        "integer-code (--compute int8) native train-step speedup over the \
+         simulate-mode blocked step (PTQ, 4 bits, default MlpSpec, median ratio)",
     )
     .set(headline);
 }

@@ -37,6 +37,9 @@ pub struct TrainConfig {
     pub dp_threads: usize,
     /// How worker gradients are combined: "dense" | "ring".
     pub dp_mode: String,
+    /// Backward GEMM arithmetic: "simulate" (f32 quantize–dequantize)
+    /// | "int8" (integer-code kernels, i8 x i8 -> i32).
+    pub compute: String,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -79,6 +82,7 @@ impl Default for TrainConfig {
             allreduce_quant: "psq".into(),
             dp_threads: 1,
             dp_mode: "dense".into(),
+            compute: "simulate".into(),
         }
     }
 }
@@ -145,6 +149,9 @@ impl TrainConfig {
         if let Some(v) = get_s("train.dp_mode") {
             self.dp_mode = v;
         }
+        if let Some(v) = get_s("train.compute") {
+            self.compute = v;
+        }
         if let Some(v) = get_s("data.kind") {
             self.data.kind = v;
         }
@@ -188,6 +195,7 @@ impl TrainConfig {
             "train.allreduce_quant" => self.allreduce_quant = val.into(),
             "train.dp_threads" | "dp_threads" => self.dp_threads = val.parse()?,
             "train.dp_mode" | "dp_mode" => self.dp_mode = val.into(),
+            "train.compute" | "compute" => self.compute = val.into(),
             "data.kind" => self.data.kind = val.into(),
             "data.noise" => self.data.noise = val.parse()?,
             "data.hard_frac" => self.data.hard_frac = val.parse()?,
@@ -214,6 +222,9 @@ impl TrainConfig {
         }
         if !["dense", "ring"].contains(&self.dp_mode.as_str()) {
             bail!("unknown dp_mode {:?} (expected dense|ring)", self.dp_mode);
+        }
+        if !["simulate", "int8"].contains(&self.compute.as_str()) {
+            bail!("unknown compute {:?} (expected simulate|int8)", self.compute);
         }
         if crate::quant::GradQuantizer::from_name(&self.allreduce_quant).is_none() {
             bail!("unknown allreduce_quant {:?}", self.allreduce_quant);
@@ -307,6 +318,23 @@ mod tests {
         let j = toml::parse("[train]\ndp_mode = \"ring\"\ndp_threads = 2\n").unwrap();
         let c = TrainConfig::from_json(&j).unwrap();
         assert_eq!((c.dp_mode.as_str(), c.dp_threads), ("ring", 2));
+    }
+
+    #[test]
+    fn compute_key_roundtrips_and_validates() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.compute, "simulate");
+        c.set("compute=int8").unwrap();
+        assert_eq!(c.compute, "int8");
+        c.validate().unwrap();
+        c.set("train.compute=simulate").unwrap();
+        assert_eq!(c.compute, "simulate");
+        c.compute = "fp64".into();
+        assert!(c.validate().is_err());
+
+        let j = toml::parse("[train]\ncompute = \"int8\"\n").unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.compute, "int8");
     }
 
     #[test]

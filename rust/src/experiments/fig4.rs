@@ -91,7 +91,7 @@ pub fn run(rt: &Runtime, reg: &Registry, args: &Args) -> Result<()> {
         var /= reps as f64;
         let qz = last.unwrap();
 
-        let hist = Histogram::from_values(&qz.codes.data, 64);
+        let hist = Histogram::from_values(&qz.codes.raw_f32(), 64);
         let mut bins = qz.row_bin_size.clone();
         bins.sort_by(f32::total_cmp);
         let max_bin = bins[bins.len() - 1];

@@ -36,9 +36,10 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: statquant <train|eval|probe|exp|list|trace-report|bench-check> [options]\n\
+    "usage: statquant <train|eval|probe|exp|gen-artifacts|list|trace-report|bench-check> [options]\n\
      \n\
      train [config.toml] [--artifacts DIR] [--set key=value ...]\n\
+     \x20     [--compute simulate|int8]                  backward GEMM arithmetic\n\
      \x20     [--dp-threads N] [--dp-mode dense|ring]   data-parallel engine\n\
      \x20     (runs when train.workers > 1; see train.allreduce_bits/_quant)\n\
      eval  --model M [--artifacts DIR] [--ckpt ckpt_xxx.json] [--batches N]\n\
@@ -49,8 +50,9 @@ fn usage() -> &'static str {
      trace-report <run-dir>   per-phase time breakdown + quantizer health\n\
      \x20                      from trace.json / metrics.prom / log.jsonl\n\
      bench-check [names...] [--dir results/bench] [--min gauge=threshold ...]\n\
+     \x20                      [--max gauge=ceiling ...]\n\
      \x20                      fail unless every BENCH_<name>.json exists, parses,\n\
-     \x20                      records gauges, and meets the --min gates\n"
+     \x20                      records gauges, and meets the --min/--max gates\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -114,12 +116,14 @@ fn run(argv: &[String]) -> Result<()> {
 
 /// CI bench gate: every named `BENCH_<name>.json` snapshot must exist,
 /// parse, and carry a non-empty `gauges` object; every `--min g=thr`
-/// gate must be met by the gauge `g` (exact name, or every labeled
-/// series `g{...}`). Non-numeric gauge values (the snapshot encodes
-/// non-finite floats as strings) fail the gate rather than pass it.
+/// floor and `--max g=thr` ceiling must be met by the gauge `g` (exact
+/// name, or every labeled series `g{...}`). Non-numeric gauge values
+/// (the snapshot encodes non-finite floats as strings) fail the gate
+/// rather than pass it.
 fn cmd_bench_check(args: &Args) -> Result<()> {
     let dir = args.flag("dir").unwrap_or("results/bench").to_string();
     let mins: Vec<String> = args.flag_all("min").iter().map(|s| s.to_string()).collect();
+    let maxes: Vec<String> = args.flag_all("max").iter().map(|s| s.to_string()).collect();
     let names: Vec<String> = if args.positional.is_empty() {
         vec!["train_step".into(), "quantizers".into()]
     } else {
@@ -147,36 +151,44 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         }
     }
 
-    for spec in &mins {
-        let (gname, thr) = spec
-            .split_once('=')
-            .with_context(|| format!("--min expects gauge=threshold, got {spec:?}"))?;
-        let thr: f64 = thr
-            .parse()
-            .with_context(|| format!("--min {spec:?}: threshold is not a number"))?;
-        let labeled_prefix = format!("{gname}{{");
-        let matching: Vec<(&String, &Json)> = gauges
-            .iter()
-            .filter(|(k, _)| k.as_str() == gname || k.starts_with(&labeled_prefix))
-            .collect();
-        if matching.is_empty() {
-            bail!("gauge {gname:?} not found in any checked bench snapshot");
-        }
-        for (k, v) in matching {
-            let val = v.as_f64().with_context(|| {
-                format!("gauge {k} is non-numeric ({v:?}) — the bench recorded a non-finite value")
-            })?;
-            if val < thr {
-                bail!("gauge {k} = {val} is below the required minimum {thr}");
+    for (specs, flag, is_min) in [(&mins, "--min", true), (&maxes, "--max", false)] {
+        for spec in specs {
+            let (gname, thr) = spec
+                .split_once('=')
+                .with_context(|| format!("{flag} expects gauge=threshold, got {spec:?}"))?;
+            let thr: f64 = thr
+                .parse()
+                .with_context(|| format!("{flag} {spec:?}: threshold is not a number"))?;
+            let labeled_prefix = format!("{gname}{{");
+            let matching: Vec<(&String, &Json)> = gauges
+                .iter()
+                .filter(|(k, _)| k.as_str() == gname || k.starts_with(&labeled_prefix))
+                .collect();
+            if matching.is_empty() {
+                bail!("gauge {gname:?} not found in any checked bench snapshot");
             }
-            println!("[bench-check] {k} = {val:.3} >= {thr}");
+            for (k, v) in matching {
+                let val = v.as_f64().with_context(|| {
+                    format!(
+                        "gauge {k} is non-numeric ({v:?}) — the bench recorded a non-finite value"
+                    )
+                })?;
+                if is_min && val < thr {
+                    bail!("gauge {k} = {val} is below the required minimum {thr}");
+                }
+                if !is_min && val > thr {
+                    bail!("gauge {k} = {val} is above the allowed maximum {thr}");
+                }
+                let rel = if is_min { ">=" } else { "<=" };
+                println!("[bench-check] {k} = {val:.3} {rel} {thr}");
+            }
         }
     }
     println!(
         "[bench-check] ok: {} snapshot(s), {} gauge(s), {} gate(s)",
         names.len(),
         gauges.len(),
-        mins.len()
+        mins.len() + maxes.len()
     );
     Ok(())
 }
@@ -197,10 +209,18 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     if let Some(v) = args.flag("dp-mode") {
         cfg.dp_mode = v.to_string();
     }
+    // sugar over --set train.compute
+    if let Some(v) = args.flag("compute") {
+        cfg.compute = v.to_string();
+    }
     args.check_unknown()?;
     cfg.validate()?;
 
-    let rt = Runtime::cpu()?;
+    let mut rt = Runtime::cpu()?;
+    match statquant::runtime::ComputeMode::from_name(&cfg.compute) {
+        Some(mode) => rt.set_compute(mode),
+        None => bail!("unknown compute mode {:?}", cfg.compute), // unreachable post-validate
+    }
     let reg = Registry::open(&cfg.artifacts_dir)?;
     if cfg.workers > 1 {
         println!(
@@ -233,8 +253,13 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         return Ok(());
     }
     println!(
-        "[train] {} on {} ({} steps, lr {}, {} bits)",
-        cfg.variant, cfg.model, cfg.steps, cfg.lr, cfg.bits
+        "[train] {} on {} ({} steps, lr {}, {} bits{})",
+        cfg.variant,
+        cfg.model,
+        cfg.steps,
+        cfg.lr,
+        cfg.bits,
+        if cfg.compute == "int8" { ", int8 compute" } else { "" }
     );
     let mut tr = Trainer::new(&rt, &reg, cfg.clone())?;
     let report = tr.train()?;

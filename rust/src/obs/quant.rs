@@ -114,6 +114,22 @@ telemetry_static!(psq, "psq");
 telemetry_static!(bhq, "bhq");
 telemetry_static!(sr, "sr");
 
+/// Count one integer-path fallback: a quantizer without an integer-code
+/// entry point (BHQ/FP8/BFP, or a bitwidth outside the i8 gate) was
+/// asked for codes and the caller reverted to the dequant path. Lands in
+/// `quant_int_fallback_total{quantizer="..."}`.
+pub fn int_fallback(name: &str) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    crate::obs::metrics()
+        .counter(
+            &labeled("quant_int_fallback_total", &[("quantizer", name)]),
+            "integer-code path fallbacks to the dequant path",
+        )
+        .inc();
+}
+
 /// Telemetry sink for a quantizer name, if one is instrumented.
 pub fn by_name(name: &str) -> Option<&'static QuantTelemetry> {
     match name {

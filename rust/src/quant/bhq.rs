@@ -15,7 +15,8 @@
 //! matmuls, 2ND FLOPs" the paper's §4.3 overhead study measures — rather
 //! than materializing a dense N x N matrix like the JAX trace does.
 
-use super::{Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
+use super::codes;
+use super::{CodeMat, Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
 use crate::quant::sr;
 use crate::util::rng::Pcg32;
 
@@ -264,7 +265,7 @@ pub fn quantize_stats(
     // silently turn a diverged row into finite garbage for the group.
     if x.data.iter().any(|v| v.is_nan()) {
         st.poisoned_rows = x.rows as u64;
-        return (super::poisoned(x.rows, x.cols), st);
+        return (super::poisoned(x.rows, x.cols, nbins), st);
     }
     let plan = build_plan_with(x, proxy);
     let n = x.rows;
@@ -289,8 +290,14 @@ pub fn quantize_stats(
         reflect(&mut ys, grp);
     }
 
-    // Per-row zero point in transformed space + SR.
-    let mut codes = Mat::zeros(n, d);
+    // Per-row zero point in transformed space + SR. The raw code q is
+    // written back into `ys` (the reconstruction input): BHQ codes are
+    // one-sided above, so the i8 `CodeMat` store may saturate (counted),
+    // and the dequantization must use the unsaturated value to keep the
+    // estimator unbiased and bitwise identical to the pre-CodeMat path.
+    let mut codes = CodeMat::zeros(n, d, codes::center_for(nbins));
+    let center = codes.center;
+    let mut saturated = 0u64;
     let mut zs = vec![0.0f32; n];
     let mut pvar = 0.0f64;
     for k in 0..n {
@@ -302,8 +309,8 @@ pub fn quantize_stats(
             0.0
         };
         let crow = codes.row_mut(k);
-        for (c, &v) in crow.iter_mut().zip(&ys[k]) {
-            let t = v - zs[k];
+        for (c, v) in crow.iter_mut().zip(ys[k].iter_mut()) {
+            let t = *v - zs[k];
             let raw = sr::sr(t, rng);
             let q = raw.max(0.0);
             st.clipped += u64::from(raw != q);
@@ -312,17 +319,22 @@ pub fn quantize_stats(
                 let p = f64::from(t) - f64::from(t.floor());
                 pvar += p * (1.0 - p) * inv_s2;
             }
-            *c = q;
+            let (s, moved) = codes::center_code(q, center);
+            *c = s;
+            saturated += u64::from(moved);
+            *v = q;
         }
     }
+    codes.saturated = saturated;
     st.values = (n * d) as u64;
     if sample_variance {
         st.sr_variance = Some(pvar);
     }
 
-    // Reconstruct: X^ = diag(1/s) Q (codes + z)   (Q^2 = I).
+    // Reconstruct: X^ = diag(1/s) Q (q + z)   (Q^2 = I), from the raw
+    // codes now held in `ys`.
     let mut rec: Vec<Vec<f32>> = (0..n)
-        .map(|k| codes.row(k).iter().map(|&c| c + zs[k]).collect())
+        .map(|k| ys[k].iter().map(|&q| q + zs[k]).collect())
         .collect();
     for grp in &plan.groups {
         reflect(&mut rec, grp);
@@ -699,7 +711,8 @@ mod tests {
         let mut rng = Pcg32::new(9, 9);
         let q = quantize(&x, 15.0, &mut rng);
         assert!(q.deq.data.iter().all(|v| v.is_nan()));
-        assert!(q.codes.data.iter().all(|v| v.is_nan()));
+        assert!(q.codes.poisoned.iter().all(|&p| p));
+        assert!(q.codes.raw_f32().iter().all(|v| v.is_nan()));
     }
 
     /// Regression: the group-count sweep indexed `sorted_mags[..1]` on an

@@ -1,0 +1,279 @@
+//! Typed integer-code storage for the low-bitwidth GEMM path.
+//!
+//! [`CodeMat`] replaces the old convention of parking integral codes in
+//! an f32 [`super::Mat`]: codes are stored as *centered* `i8`
+//! (`stored = raw - center`), so an out-of-range code is a type error
+//! (or a counted saturation), not a silent convention violation. The
+//! affine reconstruction is carried separately in [`CodeScales`]:
+//!
+//! ```text
+//! x  ≈  raw / scale + lo
+//!    =  (stored + center) / scale + lo
+//!    =  stored * inv + zero,      inv = 1/scale,
+//!                                 zero = lo + center/scale.
+//! ```
+//!
+//! Centering matters for the integer kernels: zero-padded panel tails
+//! contribute exactly `0 * b = 0` to the i32 dot products, and the
+//! worst-case product magnitude `128 * 128 = 16384` leaves i32
+//! accumulation exact for any K < 2^17.
+//!
+//! Integer storage cannot carry NaN, so poisoning (the NaN-input
+//! contract of `quant/mod.rs::poisoned`) is tracked as a per-row mask
+//! plus NaN `inv`/`zero` scales — any arithmetic consumer of a poisoned
+//! row still propagates NaN through the epilogue.
+
+/// Center offset for raw codes in `[0, nbins]`: roughly `nbins/2`,
+/// capped so that `raw - center` always fits the i8 low end
+/// (`255 -> 128`, `15 -> 8`, `1 -> 1`).
+pub fn center_for(nbins: f32) -> i32 {
+    ((nbins.ceil() as i32 + 1) / 2).min(128)
+}
+
+/// Center and saturate one raw code. Returns the stored i8 plus whether
+/// saturation moved the value (only possible for one-sided quantizers
+/// like BHQ whose raw codes may exceed `nbins`).
+#[inline]
+pub fn center_code(raw: f32, center: i32) -> (i8, bool) {
+    let c = raw - center as f32;
+    let s = c.clamp(-128.0, 127.0);
+    (s as i8, s != c)
+}
+
+/// Dense row-major matrix of centered `i8` codes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CodeMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// Centered codes, row-major: `data[i*cols + j] = raw - center`.
+    pub data: Vec<i8>,
+    /// The centering offset shared by every code in the matrix.
+    pub center: i32,
+    /// Per-row poison mask (NaN input rows; see module docs).
+    pub poisoned: Vec<bool>,
+    /// Codes moved by the saturating store (see [`center_code`]).
+    pub saturated: u64,
+}
+
+impl CodeMat {
+    pub fn zeros(rows: usize, cols: usize, center: i32) -> Self {
+        CodeMat {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+            center,
+            poisoned: vec![false; rows],
+            saturated: 0,
+        }
+    }
+
+    /// Reshape in place, never shrinking capacity (arena-friendly).
+    pub fn resize(&mut self, rows: usize, cols: usize, center: i32) {
+        self.rows = rows;
+        self.cols = cols;
+        self.center = center;
+        self.data.clear();
+        self.data.resize(rows * cols, 0);
+        self.poisoned.clear();
+        self.poisoned.resize(rows, false);
+        self.saturated = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [i8] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Store a raw (uncentered) code, saturating and counting moves.
+    #[inline]
+    pub fn store_raw(&mut self, i: usize, j: usize, raw: f32) {
+        let (s, moved) = center_code(raw, self.center);
+        self.data[i * self.cols + j] = s;
+        self.saturated += u64::from(moved);
+    }
+
+    /// Raw (uncentered) code at `(i, j)`; NaN semantics are *not*
+    /// represented here — check [`Self::is_poisoned_row`] first.
+    #[inline]
+    pub fn raw_at(&self, i: usize, j: usize) -> i32 {
+        i32::from(self.data[i * self.cols + j]) + self.center
+    }
+
+    #[inline]
+    pub fn is_poisoned_row(&self, i: usize) -> bool {
+        self.poisoned[i]
+    }
+
+    pub fn poison_row(&mut self, i: usize) {
+        self.poisoned[i] = true;
+        self.row_mut(i).fill(0);
+    }
+
+    pub fn poison_all(&mut self) {
+        self.poisoned.iter_mut().for_each(|p| *p = true);
+        self.data.fill(0);
+    }
+
+    pub fn any_poisoned(&self) -> bool {
+        self.poisoned.iter().any(|&p| p)
+    }
+
+    /// Raw codes as f32 for the analysis paths (Fig-4 histograms), with
+    /// poisoned rows rendered as NaN — the exact values the old
+    /// codes-as-f32 `Mat` carried.
+    pub fn raw_f32(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        for i in 0..self.rows {
+            if self.poisoned[i] {
+                out.extend(std::iter::repeat_n(f32::NAN, self.cols));
+            } else {
+                out.extend(
+                    self.row(i)
+                        .iter()
+                        .map(|&c| (i32::from(c) + self.center) as f32),
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Affine reconstruction factors for a [`CodeMat`]: either one
+/// (`per_row == false`, PTQ) or one per row (PSQ). Poisoned scopes carry
+/// NaN so reconstruction propagates the poison arithmetically.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CodeScales {
+    pub per_row: bool,
+    /// Bin size 1/scale (len 1 per-tensor, `rows` per-row).
+    pub inv: Vec<f32>,
+    /// `lo + center/scale` (same length as `inv`).
+    pub zero: Vec<f32>,
+}
+
+impl CodeScales {
+    pub fn resize_tensor(&mut self) {
+        self.per_row = false;
+        self.inv.clear();
+        self.inv.resize(1, 0.0);
+        self.zero.clear();
+        self.zero.resize(1, 0.0);
+    }
+
+    pub fn resize_rows(&mut self, rows: usize) {
+        self.per_row = true;
+        self.inv.clear();
+        self.inv.resize(rows, 0.0);
+        self.zero.clear();
+        self.zero.resize(rows, 0.0);
+    }
+
+    #[inline]
+    pub fn inv_at(&self, i: usize) -> f32 {
+        if self.per_row {
+            self.inv[i]
+        } else {
+            self.inv[0]
+        }
+    }
+
+    #[inline]
+    pub fn zero_at(&self, i: usize) -> f32 {
+        if self.per_row {
+            self.zero[i]
+        } else {
+            self.zero[0]
+        }
+    }
+
+    /// Dequantize one centered code from row `i`.
+    #[inline]
+    pub fn deq(&self, i: usize, code: i8) -> f32 {
+        f32::from(code) * self.inv_at(i) + self.zero_at(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn center_values_match_bit_widths() {
+        assert_eq!(center_for(255.0), 128); // 8-bit
+        assert_eq!(center_for(15.0), 8); // 4-bit
+        assert_eq!(center_for(1.0), 1); // 1-bit
+        assert_eq!(center_for(3.0), 2); // 2-bit
+    }
+
+    #[test]
+    fn centered_codes_cover_full_raw_range_without_saturation() {
+        for nbins in [1.0f32, 3.0, 15.0, 255.0] {
+            let center = center_for(nbins);
+            for raw in 0..=(nbins as i32) {
+                let (s, moved) = center_code(raw as f32, center);
+                assert!(!moved, "nbins {nbins} raw {raw} saturated");
+                assert_eq!(i32::from(s) + center, raw);
+            }
+        }
+    }
+
+    #[test]
+    fn store_saturates_and_counts_one_sided_overflow() {
+        let mut m = CodeMat::zeros(1, 2, center_for(15.0));
+        m.store_raw(0, 0, 15.0);
+        m.store_raw(0, 1, 300.0); // BHQ-style one-sided overshoot
+        assert_eq!(m.saturated, 1);
+        assert_eq!(m.raw_at(0, 0), 15);
+        assert_eq!(m.raw_at(0, 1), 127 + m.center);
+    }
+
+    #[test]
+    fn raw_f32_renders_poisoned_rows_as_nan() {
+        let mut m = CodeMat::zeros(2, 2, center_for(15.0));
+        m.store_raw(0, 0, 3.0);
+        m.store_raw(0, 1, 7.0);
+        m.poison_row(1);
+        let f = m.raw_f32();
+        assert_eq!(&f[..2], &[3.0, 7.0]);
+        assert!(f[2].is_nan() && f[3].is_nan());
+    }
+
+    #[test]
+    fn resize_resets_poison_and_saturation() {
+        let mut m = CodeMat::zeros(2, 3, 8);
+        m.poison_all();
+        m.saturated = 5;
+        m.resize(3, 2, 128);
+        assert_eq!((m.rows, m.cols, m.center), (3, 2, 128));
+        assert!(!m.any_poisoned());
+        assert_eq!(m.saturated, 0);
+        assert!(m.data.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn scales_dequantize_per_tensor_and_per_row() {
+        let mut s = CodeScales::default();
+        s.resize_tensor();
+        s.inv[0] = 0.5;
+        s.zero[0] = 1.0;
+        assert_eq!(s.deq(3, 4), 3.0); // row index ignored per-tensor
+        s.resize_rows(2);
+        s.inv = vec![0.5, 2.0];
+        s.zero = vec![0.0, 1.0];
+        assert_eq!(s.deq(0, 4), 2.0);
+        assert_eq!(s.deq(1, 4), 9.0);
+    }
+}

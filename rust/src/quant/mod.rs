@@ -16,6 +16,7 @@
 
 pub mod bfp;
 pub mod bhq;
+pub mod codes;
 pub mod fp8;
 pub mod psq;
 pub mod ptq;
@@ -23,6 +24,7 @@ pub mod segment;
 pub mod sr;
 pub mod tensor;
 
+pub use codes::{CodeMat, CodeScales};
 pub use tensor::Mat;
 
 use crate::util::rng::Pcg32;
@@ -113,6 +115,51 @@ impl GradQuantizer {
             GradQuantizer::Bfp => *out = bfp::quantize(x, b, 64, rng),
         }
     }
+
+    /// True when this quantizer/bitwidth pair has a genuine integer-code
+    /// path. PTQ/PSQ only; fractional bits give a fractional bin count B
+    /// (`raw.clamp(0.0, B)` can then produce non-integer codes), and
+    /// bits > 8 overflows i8 codes, so both are excluded.
+    pub fn supports_codes(self, bits: f32) -> bool {
+        matches!(self, GradQuantizer::Ptq | GradQuantizer::Psq)
+            && bits.fract() == 0.0
+            && (1.0..=8.0).contains(&bits)
+    }
+
+    /// Quantize `x` into typed i8 codes plus affine scales — the entry
+    /// point for the integer GEMM path. PTQ writes `codes`/`scales` only
+    /// and never materializes the dequantized matrix; PSQ additionally
+    /// fills `deq` (its per-sample scales sit on the contraction axis of
+    /// the weight-gradient GEMMs, which therefore stay on the f32 path —
+    /// DESIGN.md §5.1). Same scale math, RNG draw order and telemetry
+    /// cadence as [`Self::apply_into`].
+    ///
+    /// Returns `false` — bumping `quant_int_fallback_total` and leaving
+    /// all outputs untouched — when no integer path exists (BHQ's
+    /// Householder transform needs the f32 reconstruction; FP8/BFP are
+    /// not affine-code formats; see [`Self::supports_codes`] for the
+    /// bits gate). Callers fall back to [`Self::apply_into`].
+    pub fn quantize_codes(
+        self,
+        x: &Mat,
+        bits: f32,
+        rng: &mut Pcg32,
+        codes: &mut CodeMat,
+        scales: &mut CodeScales,
+        deq: &mut Mat,
+    ) -> bool {
+        if !self.supports_codes(bits) {
+            crate::obs::quant::int_fallback(self.name());
+            return false;
+        }
+        let b = nbins(bits);
+        match self {
+            GradQuantizer::Ptq => ptq::quantize_codes_into(x, b, rng, codes, scales),
+            GradQuantizer::Psq => psq::quantize_codes_into(x, b, rng, codes, scales, deq),
+            _ => unreachable!("supports_codes gated"),
+        }
+        true
+    }
 }
 
 /// Reusable buffers for [`GradQuantizer::apply_into`]. One per executor
@@ -157,23 +204,26 @@ impl QuantStats {
     }
 }
 
-/// Output of an affine quantizer: integer codes, dequantized values, and
-/// the per-row bin sizes (1/scale) the Fig-4 analysis plots.
+/// Output of an affine quantizer: typed integer codes, dequantized
+/// values, and the per-row bin sizes (1/scale) the Fig-4 analysis plots.
 pub struct Quantized {
-    pub codes: Mat,
+    pub codes: CodeMat,
     pub deq: Mat,
     /// Effective numeric width of one quantization bin, per row, in the
     /// *original* (untransformed) gradient units.
     pub row_bin_size: Vec<f32>,
 }
 
-/// Fully NaN-poisoned output, returned when a quantizer receives NaN
-/// input: stochastic rounding would otherwise silently launder NaN into
-/// finite garbage (`sr(NaN).max(0.0) == 0.0`), hiding a diverged
-/// gradient from every downstream consumer.
-pub(crate) fn poisoned(rows: usize, cols: usize) -> Quantized {
+/// Fully poisoned output, returned when a quantizer receives NaN input:
+/// stochastic rounding would otherwise silently launder NaN into finite
+/// garbage (`sr(NaN).max(0.0) == 0.0`), hiding a diverged gradient from
+/// every downstream consumer. The f32 sides carry literal NaN; the
+/// integer codes carry the per-row poison mask instead (i8 has no NaN).
+pub(crate) fn poisoned(rows: usize, cols: usize, nbins: f32) -> Quantized {
+    let mut codes = CodeMat::zeros(rows, cols, codes::center_for(nbins));
+    codes.poison_all();
     Quantized {
-        codes: Mat::from_vec(rows, cols, vec![f32::NAN; rows * cols]),
+        codes,
         deq: Mat::from_vec(rows, cols, vec![f32::NAN; rows * cols]),
         row_bin_size: vec![f32::NAN; rows],
     }
@@ -290,21 +340,27 @@ mod tests {
         let qp = ptq::quantize(&x, b, &mut rng);
         let qs = psq::quantize(&x, b, &mut rng);
         for (name, q) in [("ptq", &qp), ("psq", &qs)] {
-            for &c in &q.codes.data {
-                assert!(
-                    (0.0..=b).contains(&c) && c.fract() == 0.0,
-                    "{name} code {c} outside [0, {b}]"
-                );
+            assert!(!q.codes.any_poisoned(), "{name} spuriously poisoned");
+            assert_eq!(q.codes.saturated, 0, "{name} saturated in-range codes");
+            for i in 0..q.codes.rows {
+                for j in 0..q.codes.cols {
+                    let c = q.codes.raw_at(i, j);
+                    assert!(
+                        (0..=b as i32).contains(&c),
+                        "{name} code {c} outside [0, {b}]"
+                    );
+                }
             }
         }
         // BHQ codes are clipped at 0 but one-sided above (clamping the
-        // top would bias the estimator): non-negative, finite, integral.
+        // top would bias the estimator): non-negative raw codes, with any
+        // i8 overflow absorbed by the counted saturating store.
         let qb = bhq::quantize(&x, b, &mut rng);
-        for &c in &qb.codes.data {
-            assert!(
-                c >= 0.0 && c.is_finite() && c.fract() == 0.0,
-                "bhq code {c}"
-            );
+        assert!(!qb.codes.any_poisoned());
+        for i in 0..qb.codes.rows {
+            for j in 0..qb.codes.cols {
+                assert!(qb.codes.raw_at(i, j) >= 0, "bhq code negative");
+            }
         }
     }
 

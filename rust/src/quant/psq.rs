@@ -8,7 +8,8 @@
 //! R(X) = max_i R(x_i). O(N*D) FP32 overhead, same as FBGEMM's row-wise
 //! path.
 
-use super::{Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
+use super::codes;
+use super::{CodeMat, CodeScales, Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
 use crate::quant::sr;
 use crate::util::rng::Pcg32;
 
@@ -30,7 +31,9 @@ pub fn quantize_stats(
 ) -> (Quantized, QuantStats) {
     let mut st = QuantStats::default();
     let mm = x.row_minmax();
-    let mut codes = Mat::zeros(x.rows, x.cols);
+    let mut codes = CodeMat::zeros(x.rows, x.cols, codes::center_for(nbins));
+    let center = codes.center;
+    let mut saturated = 0u64;
     let mut deq = Mat::zeros(x.rows, x.cols);
     let mut bins = Vec::with_capacity(x.rows);
     let mut pvar = 0.0f64;
@@ -41,9 +44,7 @@ pub fn quantize_stats(
         if (hi - lo).is_nan() {
             st.poisoned_rows += 1;
             bins.push(f32::NAN);
-            for c in codes.row_mut(i) {
-                *c = f32::NAN;
-            }
+            codes.poison_row(i);
             for d in deq.row_mut(i) {
                 *d = f32::NAN;
             }
@@ -55,7 +56,10 @@ pub fn quantize_stats(
         st.values += x.cols as u64;
         let src = x.row(i);
         let crow = codes.row_mut(i);
-        for (c, &v) in crow.iter_mut().zip(src) {
+        // The old separate deq pass drew no RNG, so fusing it here keeps
+        // both the draw order and the deq values bitwise identical
+        // (deq computes from the pre-centering raw code q).
+        for ((c, d), &v) in crow.iter_mut().zip(deq.row_mut(i).iter_mut()).zip(src) {
             let t = scale * (v - lo);
             let raw = sr::sr(t, rng);
             let q = raw.clamp(0.0, nbins);
@@ -65,14 +69,13 @@ pub fn quantize_stats(
                 let p = f64::from(t) - f64::from(t.floor());
                 pvar += p * (1.0 - p) / f64::from(scale).powi(2);
             }
-            *c = q;
-        }
-        let drow = deq.row_mut(i);
-        let crow = codes.row(i);
-        for (d, &c) in drow.iter_mut().zip(crow) {
-            *d = c / scale + lo;
+            let (s, moved) = codes::center_code(q, center);
+            *c = s;
+            saturated += u64::from(moved);
+            *d = q / scale + lo;
         }
     }
+    codes.saturated = saturated;
     if sample_variance {
         st.sr_variance = Some(pvar);
     }
@@ -123,6 +126,72 @@ pub fn apply_into(x: &Mat, nbins: f32, rng: &mut Pcg32, out: &mut Mat) {
             *d = q / scale + lo;
         }
     }
+    if sample_variance {
+        st.sr_variance = Some(pvar);
+    }
+    tel.record(&st);
+}
+
+/// Integer-code hot path: same math, RNG draw order and telemetry
+/// cadence as [`apply_into`], emitting centered i8 codes plus per-row
+/// [`CodeScales`]. Unlike PTQ this *also* fills `deq` (bitwise identical
+/// to `apply_into`): the per-sample scales sit on the contraction axis
+/// of the backward weight-gradient GEMMs, so those two products cannot
+/// fold the scales into an integer epilogue and stay on the f32 path
+/// (DESIGN.md §5.1) — only the hidden-gradient GEMM consumes the codes.
+pub fn quantize_codes_into(
+    x: &Mat,
+    nbins: f32,
+    rng: &mut Pcg32,
+    codes: &mut CodeMat,
+    scales: &mut CodeScales,
+    deq: &mut Mat,
+) {
+    let tel = crate::obs::quant::psq();
+    let sample_variance = tel.should_sample();
+    let mut st = QuantStats::default();
+    let center = codes::center_for(nbins);
+    codes.resize(x.rows, x.cols, center);
+    scales.resize_rows(x.rows);
+    deq.resize(x.rows, x.cols);
+    let mut pvar = 0.0f64;
+    let mut saturated = 0u64;
+    for i in 0..x.rows {
+        let (lo, hi) = super::tensor::minmax_slice(x.row(i));
+        if (hi - lo).is_nan() {
+            st.poisoned_rows += 1;
+            codes.poison_row(i);
+            scales.inv[i] = f32::NAN;
+            scales.zero[i] = f32::NAN;
+            for d in deq.row_mut(i) {
+                *d = f32::NAN;
+            }
+            continue;
+        }
+        let range = (hi - lo).max(EPS_RANGE);
+        let scale = (nbins / range).min(MAX_SCALE);
+        st.values += x.cols as u64;
+        scales.inv[i] = 1.0 / scale;
+        scales.zero[i] = lo + center as f32 / scale;
+        let src = x.row(i);
+        let crow = codes.row_mut(i);
+        for ((c, d), &v) in crow.iter_mut().zip(deq.row_mut(i).iter_mut()).zip(src) {
+            let t = scale * (v - lo);
+            let raw = sr::sr(t, rng);
+            let q = raw.clamp(0.0, nbins);
+            st.clipped += u64::from(raw != q);
+            st.zero_codes += u64::from(q == 0.0);
+            if sample_variance {
+                let p = f64::from(t) - f64::from(t.floor());
+                pvar += p * (1.0 - p) / f64::from(scale).powi(2);
+            }
+            let (s, moved) = codes::center_code(q, center);
+            *c = s;
+            saturated += u64::from(moved);
+            *d = q / scale + lo;
+        }
+    }
+    codes.saturated = saturated;
     if sample_variance {
         st.sr_variance = Some(pvar);
     }
@@ -235,7 +304,36 @@ mod tests {
         assert_eq!(st.clipped, 0);
         assert_eq!(st.poisoned_rows, 1);
         assert_eq!(st.sr_variance, Some(0.0));
-        assert_eq!(&q.codes.data[..4], &[0.0, 0.0, 0.0, 15.0]);
+        assert_eq!(&q.codes.raw_f32()[..4], &[0.0, 0.0, 0.0, 15.0]);
+        assert!(q.codes.is_poisoned_row(1));
+    }
+
+    /// The codes entry point matches the stats path codewise, matches
+    /// `apply_into` bitwise on deq, and keeps the RNG stream in step.
+    #[test]
+    fn codes_path_matches_stats_and_fused_paths() {
+        let mut x = skewed(6, 10, 4);
+        x.row_mut(2)[3] = f32::NAN; // one poisoned row in the middle
+        let mut ra = Pcg32::new(19, 8);
+        let mut rb = Pcg32::new(19, 8);
+        let mut rc = Pcg32::new(19, 8);
+        let (q, _) = quantize_stats(&x, 15.0, &mut ra, false);
+        let mut codes = CodeMat::default();
+        let mut scales = CodeScales::default();
+        let mut deq = Mat::zeros(0, 0);
+        quantize_codes_into(&x, 15.0, &mut rb, &mut codes, &mut scales, &mut deq);
+        let mut fused = Mat::zeros(0, 0);
+        apply_into(&x, 15.0, &mut rc, &mut fused);
+        assert_eq!(ra.uniform(), rb.uniform(), "rng streams diverged");
+        assert_eq!(q.codes.data, codes.data);
+        assert_eq!(q.codes.poisoned, codes.poisoned);
+        assert_eq!(deq, fused, "codes-path deq != apply_into deq");
+        assert!(scales.per_row);
+        assert!(codes.is_poisoned_row(2));
+        assert!(scales.inv[2].is_nan() && scales.zero[2].is_nan());
+        for i in [0usize, 1, 3, 4, 5] {
+            assert!((scales.inv[i] - q.row_bin_size[i]).abs() < 1e-12);
+        }
     }
 
     #[test]

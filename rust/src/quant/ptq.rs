@@ -6,7 +6,8 @@
 //! outlier row inflates the bin size for *every* row, which is exactly
 //! the failure mode PSQ/BHQ repair.
 
-use super::{Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
+use super::codes;
+use super::{CodeMat, CodeScales, Mat, QuantStats, Quantized, EPS_RANGE, MAX_SCALE};
 use crate::quant::sr;
 use crate::util::rng::Pcg32;
 
@@ -34,11 +35,13 @@ pub fn quantize_stats(
     let (lo, hi) = x.minmax();
     if (hi - lo).is_nan() {
         st.poisoned_rows = x.rows as u64;
-        return (super::poisoned(x.rows, x.cols), st);
+        return (super::poisoned(x.rows, x.cols, nbins), st);
     }
     let range = (hi - lo).max(EPS_RANGE);
     let scale = (nbins / range).min(MAX_SCALE);
-    let mut codes = Mat::zeros(x.rows, x.cols);
+    let mut codes = CodeMat::zeros(x.rows, x.cols, codes::center_for(nbins));
+    let center = codes.center;
+    let mut saturated = 0u64;
     let mut deq = Mat::zeros(x.rows, x.cols);
     let mut pvar = 0.0f64;
     for ((c, d), &v) in codes
@@ -56,9 +59,12 @@ pub fn quantize_stats(
             let p = f64::from(t) - f64::from(t.floor());
             pvar += p * (1.0 - p);
         }
-        *c = q;
+        let (s, moved) = codes::center_code(q, center);
+        *c = s;
+        saturated += u64::from(moved);
         *d = q / scale + lo;
     }
+    codes.saturated = saturated;
     st.values = x.data.len() as u64;
     if sample_variance {
         st.sr_variance = Some(pvar / f64::from(scale).powi(2));
@@ -112,6 +118,94 @@ pub fn apply_into(x: &Mat, nbins: f32, rng: &mut Pcg32, out: &mut Mat) {
     tel.record(&st);
 }
 
+/// Integer-code hot path: same scale/zero math, RNG draw order and
+/// telemetry cadence as [`apply_into`], but emits centered i8 codes plus
+/// a per-tensor [`CodeScales`] and never materializes the dequantized
+/// f32 matrix — the input to `kernels::gemm_i8`. Requires integral
+/// `nbins <= 255` (the `GradQuantizer::supports_codes` gate), under
+/// which the post-clamp code range [0, B] can never saturate i8.
+pub fn quantize_codes_into(
+    x: &Mat,
+    nbins: f32,
+    rng: &mut Pcg32,
+    codes: &mut CodeMat,
+    scales: &mut CodeScales,
+) {
+    let tel = crate::obs::quant::ptq();
+    let sample_variance = tel.should_sample();
+    let mut st = QuantStats::default();
+    codes.resize(x.rows, x.cols, codes::center_for(nbins));
+    scales.resize_tensor();
+    let (lo, hi) = x.minmax();
+    if (hi - lo).is_nan() {
+        st.poisoned_rows = x.rows as u64;
+        codes.poison_all();
+        scales.inv[0] = f32::NAN;
+        scales.zero[0] = f32::NAN;
+        tel.record(&st);
+        return;
+    }
+    let range = (hi - lo).max(EPS_RANGE);
+    let scale = (nbins / range).min(MAX_SCALE);
+    let center = codes.center;
+    let mut pvar = 0.0f64;
+    for (c, &v) in codes.data.iter_mut().zip(&x.data) {
+        let t = scale * (v - lo);
+        let raw = sr::sr(t, rng);
+        let q = raw.clamp(0.0, nbins);
+        st.clipped += u64::from(raw != q);
+        st.zero_codes += u64::from(q == 0.0);
+        if sample_variance {
+            let p = f64::from(t) - f64::from(t.floor());
+            pvar += p * (1.0 - p);
+        }
+        *c = codes::center_code(q, center).0;
+    }
+    st.values = x.data.len() as u64;
+    if sample_variance {
+        st.sr_variance = Some(pvar / f64::from(scale).powi(2));
+    }
+    scales.inv[0] = 1.0 / scale;
+    scales.zero[0] = lo + center as f32 / scale;
+    tel.record(&st);
+}
+
+/// Deterministic round-to-nearest operand codes: [`quantize_det`]'s
+/// math on a raw row-major slice, emitting centered i8 codes plus a
+/// per-tensor [`CodeScales`] — no RNG, no telemetry. This quantizes the
+/// *non-gradient* GEMM operands (activations, inputs, weights) feeding
+/// the integer backward kernels, where the paper's unbiasedness
+/// requirement applies to the gradient signal only, so round-to-nearest
+/// (lower variance than SR) is the right choice.
+pub fn quantize_det_codes_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    nbins: f32,
+    codes: &mut CodeMat,
+    scales: &mut CodeScales,
+) {
+    debug_assert_eq!(x.len(), rows * cols);
+    codes.resize(rows, cols, codes::center_for(nbins));
+    scales.resize_tensor();
+    let (lo, hi) = super::tensor::minmax_slice(x);
+    if (hi - lo).is_nan() {
+        codes.poison_all();
+        scales.inv[0] = f32::NAN;
+        scales.zero[0] = f32::NAN;
+        return;
+    }
+    let range = (hi - lo).max(EPS_RANGE);
+    let scale = (nbins / range).min(MAX_SCALE);
+    let center = codes.center;
+    for (c, &v) in codes.data.iter_mut().zip(x) {
+        let q = (scale * (v - lo)).round().clamp(0.0, nbins);
+        *c = codes::center_code(q, center).0;
+    }
+    scales.inv[0] = 1.0 / scale;
+    scales.zero[0] = lo + center as f32 / scale;
+}
+
 /// Deterministic round-to-nearest PTQ (the forward-path Q_f / Q_theta).
 pub fn quantize_det(x: &Mat, nbins: f32) -> Mat {
     let (lo, hi) = x.minmax();
@@ -145,8 +239,11 @@ mod tests {
         }
         let b = 255.0;
         let q = quantize(&x, b, &mut rng);
-        for &c in &q.codes.data {
-            assert!((0.0..=b).contains(&c) && c.fract() == 0.0);
+        assert_eq!(q.codes.saturated, 0);
+        for i in 0..q.codes.rows {
+            for j in 0..q.codes.cols {
+                assert!((0..=b as i32).contains(&q.codes.raw_at(i, j)));
+            }
         }
         // |deq - x| <= bin size elementwise (SR moves at most one bin)
         let bin = q.row_bin_size[0];
@@ -191,7 +288,8 @@ mod tests {
         let mut rng = Pcg32::new(3, 3);
         let q = quantize(&x, 15.0, &mut rng);
         assert!(q.deq.data.iter().all(|v| v.is_nan()));
-        assert!(q.codes.data.iter().all(|v| v.is_nan()));
+        assert!(q.codes.poisoned.iter().all(|&p| p));
+        assert!(q.codes.raw_f32().iter().all(|v| v.is_nan()));
         assert!(q.row_bin_size.iter().all(|v| v.is_nan()));
     }
 
@@ -209,7 +307,49 @@ mod tests {
         assert_eq!(st.poisoned_rows, 0);
         // p = 0 at every point => exact SR variance 0
         assert_eq!(st.sr_variance, Some(0.0));
-        assert_eq!(q.codes.data, vec![0.0, 0.0, 0.0, 15.0]);
+        assert_eq!(q.codes.raw_f32(), vec![0.0, 0.0, 0.0, 15.0]);
+    }
+
+    /// `quantize_codes_into` consumes the identical RNG stream as
+    /// `quantize_stats` and emits the same raw codes; its per-tensor
+    /// scales reconstruct the same affine map the deq path uses.
+    #[test]
+    fn codes_path_matches_stats_path() {
+        let mut x = Mat::zeros(5, 7);
+        let mut rng0 = Pcg32::new(17, 3);
+        for v in &mut x.data {
+            *v = rng0.normal();
+        }
+        let mut ra = Pcg32::new(41, 6);
+        let mut rb = Pcg32::new(41, 6);
+        let (q, _) = quantize_stats(&x, 15.0, &mut ra, false);
+        let mut codes = CodeMat::default();
+        let mut scales = CodeScales::default();
+        quantize_codes_into(&x, 15.0, &mut rb, &mut codes, &mut scales);
+        assert_eq!(ra.uniform(), rb.uniform(), "rng streams diverged");
+        assert_eq!(q.codes.data, codes.data);
+        assert_eq!(q.codes.center, codes.center);
+        assert!(!scales.per_row);
+        // scales reconstruct the deq values up to f32 rounding
+        for i in 0..codes.rows {
+            for (j, &c) in codes.row(i).iter().enumerate() {
+                let rec = scales.deq(i, c);
+                let d = q.deq.data[i * q.deq.cols + j];
+                assert!((rec - d).abs() <= 1e-6 * d.abs().max(1.0));
+            }
+        }
+    }
+
+    /// NaN input poisons the codes path: mask set, NaN scales.
+    #[test]
+    fn codes_path_poisons_on_nan() {
+        let x = Mat::from_vec(2, 2, vec![1.0, f32::NAN, 0.5, -0.5]);
+        let mut rng = Pcg32::new(3, 3);
+        let mut codes = CodeMat::default();
+        let mut scales = CodeScales::default();
+        quantize_codes_into(&x, 15.0, &mut rng, &mut codes, &mut scales);
+        assert!(codes.poisoned.iter().all(|&p| p));
+        assert!(scales.inv[0].is_nan() && scales.zero[0].is_nan());
     }
 
     #[test]
@@ -244,5 +384,53 @@ mod tests {
         for &d in &q.deq.data {
             assert!((d - 2.5).abs() < 1e-6);
         }
+    }
+
+    /// code*inv + zero reconstructs [`quantize_det`]'s q/scale + lo:
+    /// ULP-level close in general (the rewrite reassociates), exactly
+    /// equal when the scale is a power of two.
+    #[test]
+    fn det_codes_reconstruct_quantize_det() {
+        let mut rng = Pcg32::new(9, 9);
+        let mut x = Mat::zeros(6, 7);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let mut codes = CodeMat::default();
+        let mut scales = CodeScales::default();
+        quantize_det_codes_into(&x.data, 6, 7, 255.0, &mut codes, &mut scales);
+        let det = quantize_det(&x, 255.0);
+        for (idx, &d) in det.data.iter().enumerate() {
+            let rec = codes.data[idx] as f32 * scales.inv[0] + scales.zero[0];
+            assert!(
+                (rec - d).abs() <= 1e-5 * d.abs().max(1.0),
+                "idx {idx}: {rec} vs {d}"
+            );
+        }
+
+        // power-of-two grid: lo = 0, range = 255/128, so scale = 128
+        // exactly; reconstruction is bitwise.
+        let mut px = Mat::zeros(1, 256);
+        for (i, v) in px.data.iter_mut().enumerate() {
+            *v = i as f32 / 128.0;
+        }
+        quantize_det_codes_into(&px.data, 1, 256, 255.0, &mut codes, &mut scales);
+        let pdet = quantize_det(&px, 255.0);
+        for (idx, &d) in pdet.data.iter().enumerate() {
+            let rec = codes.data[idx] as f32 * scales.inv[0] + scales.zero[0];
+            assert_eq!(rec.to_bits(), d.to_bits(), "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn det_codes_poison_on_nan_and_handle_empty() {
+        let mut codes = CodeMat::default();
+        let mut scales = CodeScales::default();
+        quantize_det_codes_into(&[1.0, f32::NAN], 1, 2, 255.0, &mut codes, &mut scales);
+        assert!(codes.poisoned.iter().all(|&p| p));
+        assert!(scales.inv[0].is_nan() && scales.zero[0].is_nan());
+        quantize_det_codes_into(&[], 0, 0, 255.0, &mut codes, &mut scales);
+        assert_eq!(codes.len(), 0);
+        assert!(scales.inv[0].is_finite());
     }
 }

@@ -248,6 +248,303 @@ pub fn col_sums(out: &mut [f32], a: &[f32], n: usize) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Integer-code kernels (the true low-bitwidth backward path)
+// ---------------------------------------------------------------------
+//
+// `gemm_i8` / `gemm_i8_at_b` consume centered i8 codes (see
+// `quant::codes`) instead of dequantized f32. Both pack their operands
+// into K-padded, pre-widened i16 panels — i16 inputs let the 4-lane i32
+// dot product lower to multiply-accumulate SIMD (pmaddwd-class) where a
+// raw i8 formulation does not — accumulate in i32 (exact: centered
+// products are <= 128*128, so any K < 2^17 fits), and fold the affine
+// reconstruction in a fused epilogue:
+//
+//   A[i,k] = ca[i,k]*inv_a_i + zero_a_i,  B likewise =>
+//   C[i,j] = init
+//          + inv_a_i*inv_b_j * S_ij          (S = integer code GEMM)
+//          + inv_a_i*zero_b_j * rowsum_ca[i]
+//          + zero_a_i*inv_b_j * rowsum_cb[j]
+//          + zero_a_i*zero_b_j * K.
+//
+// The code sums come out of the packing pass; zero padding is exact
+// because centered pad codes contribute 0 to both sums and products.
+// Integer accumulation is associative, so the blocked kernels are
+// bitwise identical to `naive::{gemm_i8,gemm_i8_at_b}` by construction;
+// the f32 epilogue keeps determinism the same way the f32 kernels do
+// (one accumulator chain per element, fixed order, no fma). NaN poison
+// flows through the *scales* (i8 codes cannot carry NaN): a poisoned
+// row/tensor has NaN inv/zero, which the epilogue spreads across the
+// affected outputs.
+
+/// Round a contraction length up to the i16 panel granularity (SIMD
+/// lane multiple; zero-padded, which is exact for centered codes).
+pub fn padded_k(k: usize) -> usize {
+    (k + 15) & !15
+}
+
+/// Reusable panel/sum/accumulator buffers for the integer kernels:
+/// resize-never-shrink, one per executor workspace, so the int8 step
+/// stays allocation-free after warm-up.
+#[derive(Default)]
+pub struct IntGemmScratch {
+    pa: Vec<i16>,
+    pb: Vec<i16>,
+    sums_a: Vec<i32>,
+    sums_b: Vec<i32>,
+    acc: Vec<i32>,
+}
+
+impl IntGemmScratch {
+    /// Currently reserved bytes (for the workspace high-water gauge).
+    pub fn bytes(&self) -> usize {
+        2 * (self.pa.capacity() + self.pb.capacity())
+            + 4 * (self.sums_a.capacity() + self.sums_b.capacity() + self.acc.capacity())
+    }
+}
+
+/// Per-row or per-tensor scale lookup (len 1 = per-tensor).
+#[inline]
+fn sel(s: &[f32], i: usize) -> f32 {
+    if s.len() == 1 {
+        s[0]
+    } else {
+        s[i]
+    }
+}
+
+/// The shared epilogue fold — one expression, used by both the blocked
+/// and naive integer kernels so parity is bitwise by construction.
+#[inline]
+fn fold_i8(
+    acc: i32,
+    init: f32,
+    inv_a: f32,
+    zero_a: f32,
+    inv_b: f32,
+    zero_b: f32,
+    sum_a: i32,
+    sum_b: i32,
+    kf: f32,
+) -> f32 {
+    let mut y = init;
+    y += (inv_a * inv_b) * acc as f32;
+    y += (inv_a * zero_b) * sum_a as f32;
+    y += (zero_a * inv_b) * sum_b as f32;
+    y += (zero_a * zero_b) * kf;
+    y
+}
+
+/// Pack centered codes row-major into a `rows x kp` i16 panel with
+/// per-row code sums. `clear + resize` re-zeroes every element, so a
+/// reused scratch vector can never leak stale pad values.
+fn pack_rows(dst: &mut Vec<i16>, sums: &mut Vec<i32>, src: &[i8], rows: usize, cols: usize, kp: usize) {
+    dst.clear();
+    dst.resize(rows * kp, 0);
+    sums.clear();
+    sums.resize(rows, 0);
+    for i in 0..rows {
+        let srow = &src[i * cols..(i + 1) * cols];
+        let drow = &mut dst[i * kp..i * kp + cols];
+        let mut s = 0i32;
+        for (d, &v) in drow.iter_mut().zip(srow) {
+            *d = i16::from(v);
+            s += i32::from(v);
+        }
+        sums[i] = s;
+    }
+}
+
+/// Pack the transpose: `src (rows x cols)` becomes a `cols x rp` panel
+/// (`rp = padded rows`) with per-column code sums.
+fn pack_cols(dst: &mut Vec<i16>, sums: &mut Vec<i32>, src: &[i8], rows: usize, cols: usize, rp: usize) {
+    dst.clear();
+    dst.resize(cols * rp, 0);
+    sums.clear();
+    sums.resize(cols, 0);
+    for i in 0..rows {
+        for (j, &v) in src[i * cols..(i + 1) * cols].iter().enumerate() {
+            dst[j * rp + i] = i16::from(v);
+            sums[j] += i32::from(v);
+        }
+    }
+}
+
+/// The blocked integer core on packed panels: `acc (m x n) = PA · PBᵀ`
+/// in code space (i32, exact), then one fused epilogue pass into f32 C.
+/// K is tiled at [`KC`] so the active B panel stays cache-resident; the
+/// 4-lane unrolled dot product is the SIMD-friendly inner loop.
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_core(
+    c: &mut [f32],
+    init: Init<'_>,
+    pa: &[i16],
+    sums_a: &[i32],
+    inv_a: &[f32],
+    zero_a: &[f32],
+    pb: &[i16],
+    sums_b: &[i32],
+    inv_b: &[f32],
+    zero_b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    kp: usize,
+    acc: &mut Vec<i32>,
+) {
+    acc.clear();
+    acc.resize(m * n, 0);
+    let mut k0 = 0;
+    while k0 < kp {
+        let k1 = (k0 + KC).min(kp);
+        for i in 0..m {
+            let ar = &pa[i * kp + k0..i * kp + k1];
+            let arow = &mut acc[i * n..(i + 1) * n];
+            for (j, av) in arow.iter_mut().enumerate() {
+                let br = &pb[j * kp + k0..j * kp + k1];
+                let mut s = [0i32; 4];
+                for (at, bt) in ar.chunks_exact(4).zip(br.chunks_exact(4)) {
+                    s[0] += i32::from(at[0]) * i32::from(bt[0]);
+                    s[1] += i32::from(at[1]) * i32::from(bt[1]);
+                    s[2] += i32::from(at[2]) * i32::from(bt[2]);
+                    s[3] += i32::from(at[3]) * i32::from(bt[3]);
+                }
+                *av += (s[0] + s[1]) + (s[2] + s[3]);
+            }
+        }
+        k0 = k1;
+    }
+    let kf = k as f32;
+    for i in 0..m {
+        let (ia, za) = (sel(inv_a, i), sel(zero_a, i));
+        let sa = sums_a[i];
+        for j in 0..n {
+            let iv = match init {
+                Init::Zero => 0.0,
+                Init::Bias(bias) => bias[j],
+            };
+            c[i * n + j] = fold_i8(
+                acc[i * n + j],
+                iv,
+                ia,
+                za,
+                sel(inv_b, j),
+                sel(zero_b, j),
+                sa,
+                sums_b[j],
+                kf,
+            );
+        }
+    }
+}
+
+/// Blocked integer `C (m x n) = init + A · Bᵀ` on centered i8 codes:
+/// `a` is `m x k` row-major, `bt` is `n x k` row-major (i.e. B supplied
+/// transposed — for the hidden-gradient GEMM the `hidden x classes`
+/// weight matrix already *is* this layout, so no transpose pass exists
+/// on the int path). Scales are per-tensor (len 1) or per-row of the
+/// respective operand (len m for A — the PSQ per-sample axis — or len n
+/// for Bᵀ); both axes survive the epilogue fold.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8(
+    c: &mut [f32],
+    init: Init<'_>,
+    a: &[i8],
+    inv_a: &[f32],
+    zero_a: &[f32],
+    bt: &[i8],
+    inv_b: &[f32],
+    zero_b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    ws: &mut IntGemmScratch,
+) {
+    assert_eq!(a.len(), m * k, "gemm_i8: A is not m x k");
+    assert_eq!(bt.len(), n * k, "gemm_i8: Bt is not n x k");
+    assert_eq!(c.len(), m * n, "gemm_i8: C is not m x n");
+    assert!(inv_a.len() == 1 || inv_a.len() == m, "gemm_i8: A scale arity");
+    assert!(inv_b.len() == 1 || inv_b.len() == n, "gemm_i8: B scale arity");
+    assert_eq!(inv_a.len(), zero_a.len());
+    assert_eq!(inv_b.len(), zero_b.len());
+    debug_assert!(k < (1 << 17), "gemm_i8: i32 accumulator headroom");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let kp = padded_k(k);
+    pack_rows(&mut ws.pa, &mut ws.sums_a, a, m, k, kp);
+    pack_rows(&mut ws.pb, &mut ws.sums_b, bt, n, k, kp);
+    let (pa, pb) = (&ws.pa, &ws.pb);
+    gemm_i8_core(
+        c, init, pa, &ws.sums_a, inv_a, zero_a, pb, &ws.sums_b, inv_b, zero_b, m, n, k, kp,
+        &mut ws.acc,
+    );
+}
+
+/// Blocked integer `C (k x n) = init + Aᵀ · B` on centered i8 codes
+/// (`a` is `m x k`, `b` is `m x n`, both row-major) — the weight-
+/// gradient contraction over the batch axis. Scales must be per-tensor:
+/// a per-row scale here sits on the *contraction* axis and cannot fold
+/// into the epilogue (that operand must use the f32 path instead —
+/// DESIGN.md §5.1).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_at_b(
+    c: &mut [f32],
+    init: Init<'_>,
+    a: &[i8],
+    inv_a: &[f32],
+    zero_a: &[f32],
+    b: &[i8],
+    inv_b: &[f32],
+    zero_b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ws: &mut IntGemmScratch,
+) {
+    assert_eq!(a.len(), m * k, "gemm_i8_at_b: A is not m x k");
+    assert_eq!(b.len(), m * n, "gemm_i8_at_b: B is not m x n");
+    assert_eq!(c.len(), k * n, "gemm_i8_at_b: C is not k x n");
+    assert_eq!(inv_a.len(), 1, "gemm_i8_at_b: A scales must be per-tensor");
+    assert_eq!(inv_b.len(), 1, "gemm_i8_at_b: B scales must be per-tensor");
+    assert_eq!(zero_a.len(), 1);
+    assert_eq!(zero_b.len(), 1);
+    debug_assert!(m < (1 << 17), "gemm_i8_at_b: i32 accumulator headroom");
+    if k == 0 || n == 0 {
+        return;
+    }
+    let mp = padded_k(m);
+    pack_cols(&mut ws.pa, &mut ws.sums_a, a, m, k, mp);
+    pack_cols(&mut ws.pb, &mut ws.sums_b, b, m, n, mp);
+    let (pa, pb) = (&ws.pa, &ws.pb);
+    gemm_i8_core(
+        c, init, pa, &ws.sums_a, inv_a, zero_a, pb, &ws.sums_b, inv_b, zero_b, k, n, m, mp,
+        &mut ws.acc,
+    );
+}
+
+/// Integer-path bias-gradient reduction: `out[j] = sum_i deq(codes[i,j])`
+/// folded through the per-tensor affine map,
+/// `out[j] = inv * colsum_codes[j] + rows * zero`.
+pub fn col_sums_i8(out: &mut [f32], codes: &[i8], n: usize, inv: f32, zero: f32) {
+    assert_eq!(out.len(), n, "col_sums_i8: out length != n");
+    if n == 0 {
+        return;
+    }
+    assert_eq!(codes.len() % n, 0, "col_sums_i8: codes not a multiple of n");
+    let rows = codes.len() / n;
+    // Exact i32 column sums (strided pass), folded once per column.
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut s = 0i32;
+        let mut idx = j;
+        for _ in 0..rows {
+            s += i32::from(codes[idx]);
+            idx += n;
+        }
+        *o = inv * s as f32 + rows as f32 * zero;
+    }
+}
+
 /// Reference kernels: the unblocked triple loops the blocked versions
 /// must match bitwise (single accumulator, same per-element add order).
 pub mod naive {
@@ -301,6 +598,97 @@ pub mod naive {
                     acc += a[mi * k + kk] * b[mi * n + j];
                 }
                 c[kk * n + j] = acc;
+            }
+        }
+    }
+
+    /// Naive integer reference for [`super::gemm_i8`]: triple loop over
+    /// the raw (unpacked) codes with a single i32 accumulator, sums
+    /// computed on the fly, same [`super::fold_i8`] epilogue — the
+    /// blocked kernel must match bitwise (i32 is associative, and the
+    /// epilogue expression is literally shared).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_i8(
+        c: &mut [f32],
+        init: Init<'_>,
+        a: &[i8],
+        inv_a: &[f32],
+        zero_a: &[f32],
+        bt: &[i8],
+        inv_b: &[f32],
+        zero_b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(bt.len(), n * k);
+        assert_eq!(c.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let sa: i32 = arow.iter().map(|&v| i32::from(v)).sum();
+            for j in 0..n {
+                let brow = &bt[j * k..(j + 1) * k];
+                let sb: i32 = brow.iter().map(|&v| i32::from(v)).sum();
+                let mut acc = 0i32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += i32::from(av) * i32::from(bv);
+                }
+                let iv = match init {
+                    Init::Zero => 0.0,
+                    Init::Bias(bias) => bias[j],
+                };
+                c[i * n + j] = super::fold_i8(
+                    acc,
+                    iv,
+                    super::sel(inv_a, i),
+                    super::sel(zero_a, i),
+                    super::sel(inv_b, j),
+                    super::sel(zero_b, j),
+                    sa,
+                    sb,
+                    k as f32,
+                );
+            }
+        }
+    }
+
+    /// Naive integer reference for [`super::gemm_i8_at_b`] (per-tensor
+    /// scales only, like the blocked kernel).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_i8_at_b(
+        c: &mut [f32],
+        init: Init<'_>,
+        a: &[i8],
+        inv_a: &[f32],
+        zero_a: &[f32],
+        b: &[i8],
+        inv_b: &[f32],
+        zero_b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), m * n);
+        assert_eq!(c.len(), k * n);
+        assert_eq!(inv_a.len(), 1);
+        assert_eq!(inv_b.len(), 1);
+        for kk in 0..k {
+            let sa: i32 = (0..m).map(|mi| i32::from(a[mi * k + kk])).sum();
+            for j in 0..n {
+                let sb: i32 = (0..m).map(|mi| i32::from(b[mi * n + j])).sum();
+                let mut acc = 0i32;
+                for mi in 0..m {
+                    acc += i32::from(a[mi * k + kk]) * i32::from(b[mi * n + j]);
+                }
+                let iv = match init {
+                    Init::Zero => 0.0,
+                    Init::Bias(bias) => bias[j],
+                };
+                c[kk * n + j] = super::fold_i8(
+                    acc, iv, inv_a[0], zero_a[0], inv_b[0], zero_b[0], sa, sb, m as f32,
+                );
             }
         }
     }
@@ -431,5 +819,172 @@ mod tests {
         assert_eq!(out, [1.0 + 3.0 + 5.0, 2.0 + 4.0 + 6.0]);
         let mut empty: [f32; 0] = [];
         col_sums(&mut empty, &[], 0);
+    }
+
+    fn randc(n: usize, rng: &mut Pcg32) -> Vec<i8> {
+        (0..n)
+            .map(|_| ((rng.uniform() * 256.0) as i32 - 128).clamp(-128, 127) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn gemm_i8_matches_naive_bitwise_across_shapes_and_scale_arities() {
+        let mut rng = Pcg32::new(81, 0);
+        let mut ws = IntGemmScratch::default();
+        // covers: empty axes, M=1, K=0, K straddling the KC tile and the
+        // 16-wide pad granularity
+        for (m, n, k) in [
+            (0usize, 0usize, 0usize),
+            (1, 1, 1),
+            (1, 5, 3),
+            (4, 3, 0),
+            (5, 7, 16),
+            (7, 4, 17),
+            (9, 6, 130),
+            (16, 11, 300),
+        ] {
+            let a = randc(m * k, &mut rng);
+            let bt = randc(n * k, &mut rng);
+            let bias = randv(n, &mut rng);
+            for per_row in [false, true] {
+                let (inv_a, zero_a) = if per_row {
+                    (randv(m, &mut rng), randv(m, &mut rng))
+                } else {
+                    (randv(1, &mut rng), randv(1, &mut rng))
+                };
+                let inv_b = randv(1, &mut rng);
+                let zero_b = randv(1, &mut rng);
+                for init_bias in [false, true] {
+                    let init = || {
+                        if init_bias {
+                            Init::Bias(&bias)
+                        } else {
+                            Init::Zero
+                        }
+                    };
+                    let mut c_blk = vec![f32::NAN; m * n];
+                    let mut c_ref = vec![f32::NAN; m * n];
+                    gemm_i8(
+                        &mut c_blk, init(), &a, &inv_a, &zero_a, &bt, &inv_b, &zero_b, m, n, k,
+                        &mut ws,
+                    );
+                    naive::gemm_i8(
+                        &mut c_ref, init(), &a, &inv_a, &zero_a, &bt, &inv_b, &zero_b, m, n, k,
+                    );
+                    assert_bitwise(
+                        &c_blk,
+                        &c_ref,
+                        &format!("gemm_i8 {m}x{n}x{k} per_row={per_row} bias={init_bias}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_i8_at_b_matches_naive_bitwise_across_shapes() {
+        let mut rng = Pcg32::new(82, 0);
+        let mut ws = IntGemmScratch::default();
+        for (m, k, n) in [
+            (0usize, 3usize, 2usize),
+            (1, 1, 1),
+            (2, 5, 3),
+            (4, 4, 4),
+            (17, 6, 5),
+            (130, 9, 10),
+        ] {
+            let a = randc(m * k, &mut rng);
+            let b = randc(m * n, &mut rng);
+            let inv_a = randv(1, &mut rng);
+            let zero_a = randv(1, &mut rng);
+            let inv_b = randv(1, &mut rng);
+            let zero_b = randv(1, &mut rng);
+            let mut c_blk = vec![f32::NAN; k * n];
+            let mut c_ref = vec![f32::NAN; k * n];
+            gemm_i8_at_b(
+                &mut c_blk,
+                Init::Zero,
+                &a,
+                &inv_a,
+                &zero_a,
+                &b,
+                &inv_b,
+                &zero_b,
+                m,
+                k,
+                n,
+                &mut ws,
+            );
+            naive::gemm_i8_at_b(
+                &mut c_ref, Init::Zero, &a, &inv_a, &zero_a, &b, &inv_b, &zero_b, m, k, n,
+            );
+            assert_bitwise(&c_blk, &c_ref, &format!("gemm_i8_at_b {m}x{k}x{n}"));
+        }
+    }
+
+    /// Regression: a reused scratch must not leak a previous (larger)
+    /// shape's pad values into a smaller call.
+    #[test]
+    fn int_scratch_reuse_across_shrinking_shapes_is_clean() {
+        let mut rng = Pcg32::new(83, 0);
+        let mut ws = IntGemmScratch::default();
+        let s1 = randv(1, &mut rng);
+        // warm with a big K (pads a wide panel)...
+        let a = randc(8 * 300, &mut rng);
+        let bt = randc(6 * 300, &mut rng);
+        let mut c = vec![0.0f32; 48];
+        gemm_i8(&mut c, Init::Zero, &a, &s1, &s1, &bt, &s1, &s1, 8, 6, 300, &mut ws);
+        // ...then run a tiny shape whose pad region overlaps stale data
+        let a2 = randc(2 * 3, &mut rng);
+        let bt2 = randc(2 * 3, &mut rng);
+        let mut c_blk = vec![f32::NAN; 4];
+        let mut c_ref = vec![f32::NAN; 4];
+        gemm_i8(&mut c_blk, Init::Zero, &a2, &s1, &s1, &bt2, &s1, &s1, 2, 2, 3, &mut ws);
+        naive::gemm_i8(&mut c_ref, Init::Zero, &a2, &s1, &s1, &bt2, &s1, &s1, 2, 2, 3);
+        assert_bitwise(&c_blk, &c_ref, "scratch reuse");
+    }
+
+    /// NaN scales (the integer poison channel) spread across exactly the
+    /// rows they scope: per-row NaN poisons one output row, per-tensor
+    /// NaN poisons everything — even at K = 0.
+    #[test]
+    fn nan_scales_poison_their_scope() {
+        let mut ws = IntGemmScratch::default();
+        let a: Vec<i8> = vec![1, 2, 3, 4];
+        let bt: Vec<i8> = vec![5, 6, 7, 8];
+        let inv_a = vec![0.5, f32::NAN];
+        let zero_a = vec![0.0, f32::NAN];
+        let s1 = vec![1.0f32];
+        let z0 = vec![0.0f32];
+        let mut c = vec![0.0f32; 4];
+        gemm_i8(&mut c, Init::Zero, &a, &inv_a, &zero_a, &bt, &s1, &z0, 2, 2, 2, &mut ws);
+        assert!(c[0].is_finite() && c[1].is_finite());
+        assert!(c[2].is_nan() && c[3].is_nan());
+        // per-tensor poison at K = 0 still propagates (0 * NaN = NaN)
+        let mut c0 = vec![0.0f32; 4];
+        let nan1 = vec![f32::NAN];
+        gemm_i8(&mut c0, Init::Zero, &[], &nan1, &nan1, &[], &s1, &z0, 2, 2, 0, &mut ws);
+        assert!(c0.iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn col_sums_i8_folds_affine_map() {
+        // codes (3 x 2), inv = 0.5, zero = 1.0:
+        // out[j] = 0.5 * colsum + 3 * 1.0
+        let codes: Vec<i8> = vec![1, -2, 3, 4, -5, 6];
+        let mut out = [0.0f32; 2];
+        col_sums_i8(&mut out, &codes, 2, 0.5, 1.0);
+        assert_eq!(out, [0.5 * (1 - 5) as f32 + 3.0, 0.5 * (-2 + 4 + 6) as f32 + 3.0]);
+        let mut empty: [f32; 0] = [];
+        col_sums_i8(&mut empty, &[], 0, 1.0, 0.0);
+    }
+
+    #[test]
+    fn padded_k_rounds_to_lane_multiple() {
+        assert_eq!(padded_k(0), 0);
+        assert_eq!(padded_k(1), 16);
+        assert_eq!(padded_k(16), 16);
+        assert_eq!(padded_k(17), 32);
+        assert_eq!(padded_k(130), 144);
     }
 }

@@ -22,7 +22,7 @@ pub mod pjrt;
 
 pub use artifact::{ArtifactMeta, Registry, StepKind, TensorSpec};
 pub use executor::{Executor, ExecutorBackend, HostTensor, StepOutputs};
-pub use native::{KernelPath, MlpSpec, NativeExecutor};
+pub use native::{ComputeMode, KernelPath, MlpSpec, NativeExecutor};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -42,6 +42,7 @@ enum Backend {
 /// train step for all bitwidths — `bits` is a runtime input).
 pub struct Runtime {
     backend: Backend,
+    compute: ComputeMode,
     cache: RefCell<HashMap<String, Arc<Executor>>>,
 }
 
@@ -56,6 +57,7 @@ impl Runtime {
             Ok(rt) => {
                 return Ok(Self {
                     backend: Backend::Pjrt(rt),
+                    compute: ComputeMode::default(),
                     cache: RefCell::new(HashMap::new()),
                 })
             }
@@ -70,8 +72,26 @@ impl Runtime {
     pub fn native() -> Self {
         Self {
             backend: Backend::Native,
+            compute: ComputeMode::default(),
             cache: RefCell::new(HashMap::new()),
         }
+    }
+
+    /// Select the backward arithmetic mode for native executors built
+    /// after this call (`--compute {simulate,int8}`). Call before the
+    /// first [`Self::executor`] — cached executors keep the mode they
+    /// were built with, so flipping mid-run would split the cache's
+    /// behavior by build order; the cache is cleared to keep the mode
+    /// uniform. The PJRT backend ignores this (its HLO is simulate-only).
+    pub fn set_compute(&mut self, compute: ComputeMode) {
+        if self.compute != compute {
+            self.compute = compute;
+            self.cache.borrow_mut().clear();
+        }
+    }
+
+    pub fn compute(&self) -> ComputeMode {
+        self.compute
     }
 
     pub fn platform(&self) -> String {
@@ -89,7 +109,7 @@ impl Runtime {
             return Ok(e.clone());
         }
         let backend: Box<dyn ExecutorBackend> = match &self.backend {
-            Backend::Native => Box::new(NativeExecutor::default()),
+            Backend::Native => Box::new(NativeExecutor::default().with_compute(self.compute)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(rt) => {
                 let t0 = std::time::Instant::now();
@@ -130,6 +150,26 @@ mod tests {
         let b = rt.executor(meta).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "executor cache must dedupe");
         assert_eq!(a.backend_name(), "native");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn set_compute_clears_cache_and_sticks() {
+        let mut rt = Runtime::native();
+        assert_eq!(rt.compute(), ComputeMode::Simulate);
+        let dir = std::env::temp_dir().join(format!("sq_rt_cm_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        native::write_artifacts(&dir, &MlpSpec::default()).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let meta = reg.meta("mlp", "ptq", StepKind::Train).unwrap().clone();
+        let a = rt.executor(&meta).unwrap();
+        rt.set_compute(ComputeMode::Int8);
+        assert_eq!(rt.compute(), ComputeMode::Int8);
+        let b = rt.executor(&meta).unwrap();
+        assert!(
+            !Arc::ptr_eq(&a, &b),
+            "mode switch must invalidate cached executors"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

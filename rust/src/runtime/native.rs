@@ -40,7 +40,7 @@ use super::artifact::{ArtifactMeta, StepKind};
 use super::executor::{ExecutorBackend, HostTensor, StepOutputs};
 use super::kernels::{self, Init};
 use crate::obs::{Counter, Gauge};
-use crate::quant::{FusedScratch, GradQuantizer, Mat};
+use crate::quant::{ptq, CodeMat, CodeScales, FusedScratch, GradQuantizer, Mat};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
 
@@ -234,11 +234,38 @@ struct Workspace {
     w2t: Vec<f32>,
     grad: Vec<f32>,
     scratch: FusedScratch,
+    // Integer-path lanes (`--compute int8`): i8 code matrices + affine
+    // scales for the two gradient signals and the three det-quantized
+    // GEMM operands, plus the i16/i32 packing scratch the `gemm_i8*`
+    // kernels own. All stay capacity-zero in simulate mode, so the
+    // simulate-mode `native_ws_bytes` value is unchanged.
+    int_gemm: kernels::IntGemmScratch,
+    g_codes: CodeMat,
+    g_scales: CodeScales,
+    gh_codes: CodeMat,
+    gh_scales: CodeScales,
+    h_codes: CodeMat,
+    h_scales: CodeScales,
+    x_codes: CodeMat,
+    x_scales: CodeScales,
+    w2_codes: CodeMat,
+    w2_scales: CodeScales,
     high_water: usize,
     metrics: Option<WsMetrics>,
 }
 
 impl Workspace {
+    /// Bytes held by the integer-path code/panel lanes (zero until the
+    /// first `--compute int8` step on this thread).
+    fn int_bytes(&self) -> usize {
+        self.int_gemm.bytes()
+            + self.g_codes.data.capacity()
+            + self.gh_codes.data.capacity()
+            + self.h_codes.data.capacity()
+            + self.x_codes.data.capacity()
+            + self.w2_codes.data.capacity()
+    }
+
     fn prepare(&mut self, dims: &MlpDims) {
         let (b, h, c) = (dims.batch, dims.hidden, dims.classes);
         self.h_pre.resize(b * h, 0.0);
@@ -269,12 +296,13 @@ impl Workspace {
                 ),
             });
         }
-        let need = 4 * b * h + 4 * b * c + h * c + dims_len(dims);
+        let f32_elems = 4 * b * h + 4 * b * c + h * c + dims_len(dims);
+        let need = f32_elems * std::mem::size_of::<f32>() + self.int_bytes();
         if need > self.high_water {
             self.high_water = need;
             if let Some(m) = &self.metrics {
                 m.grows.inc();
-                m.bytes.set((need * std::mem::size_of::<f32>()) as f64);
+                m.bytes.set(need as f64);
             }
         }
     }
@@ -417,8 +445,178 @@ fn backward_blocked(
     kernels::col_sums(db1, &gh.data, h_dim);
 }
 
+/// Bin count for the deterministic 8-bit operand quantization of the
+/// integer backward path (H, X, W2 — the non-gradient GEMM operands).
+const OPERAND_NBINS: f32 = 255.0;
+
+/// Integer-code backward — the `--compute int8` path. This is genuine
+/// low-bitwidth training, not a simulation: the gradient signals come
+/// out of [`GradQuantizer::quantize_codes`] as centered i8 codes (the
+/// dequantized f32 signal is never materialized on the PTQ path), the
+/// non-gradient operands (H, X, W2) are deterministically quantized to
+/// 8-bit codes per step, and every eligible GEMM runs in the i8/i32
+/// `kernels::gemm_i8*` family with the affine scales folded into the
+/// f32 epilogue.
+///
+/// Scale-axis split (see DESIGN.md §5.1): PTQ's per-tensor scales fold
+/// into every epilogue, so all three backward GEMMs and both bias
+/// reductions run integer. PSQ's per-sample scales sit on the
+/// *contraction* axis of the weight-gradient GEMMs (`HᵀG`, `Xᵀg_h`),
+/// where a per-row scale cannot be hoisted out of the k-sum — those
+/// stay on the f32 kernels over the dequantized signal (bitwise equal
+/// to the simulate path), while the hidden-gradient GEMM `G·W2ᵀ` (scales
+/// on the M axis) still runs integer.
+///
+/// Callers must gate on [`GradQuantizer::supports_codes`]; ineligible
+/// quantizers/bitwidths take `backward_blocked` via [`backward_for`],
+/// counted in `quant_int_fallback_total`.
+fn backward_blocked_int8(
+    dims: &MlpDims,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    q: GradQuantizer,
+    bits: f32,
+    rng: &mut Pcg32,
+    ws: &mut Workspace,
+) {
+    let (_w1, _b1, w2, _b2) = split_params(dims, params);
+    let (bsz, d_dim, h_dim, c_dim) = (dims.batch, dims.in_dim, dims.hidden, dims.classes);
+
+    // G = (softmax - onehot) / batch — identical to the simulate path.
+    ws.g.data.copy_from_slice(&ws.probs.data);
+    let inv_b = 1.0 / bsz as f32;
+    for (i, &label) in y.iter().enumerate() {
+        let row = ws.g.row_mut(i);
+        row[label as usize] -= 1.0;
+        for v in row.iter_mut() {
+            *v *= inv_b;
+        }
+    }
+
+    // Logit-gradient signal straight to codes (same RNG stream as the
+    // fused simulate quantizers; PSQ also fills `ws.gq` with the
+    // dequantized signal for its f32 weight-gradient kernels).
+    let ok = q.quantize_codes(&ws.g, bits, rng, &mut ws.g_codes, &mut ws.g_scales, &mut ws.gq);
+    debug_assert!(ok, "backward_for gates on supports_codes");
+
+    // Deterministic 8-bit operand codes. W2's row-major (hidden x
+    // classes) layout is already the Bᵀ panel `gemm_i8` contracts
+    // against, so the integer path needs no transpose pass at all.
+    ptq::quantize_det_codes_into(&ws.h, bsz, h_dim, OPERAND_NBINS, &mut ws.h_codes, &mut ws.h_scales);
+    ptq::quantize_det_codes_into(w2, h_dim, c_dim, OPERAND_NBINS, &mut ws.w2_codes, &mut ws.w2_scales);
+
+    let (dw1, rest) = ws.grad.split_at_mut(d_dim * h_dim);
+    let (db1, rest) = rest.split_at_mut(h_dim);
+    let (dw2, db2) = rest.split_at_mut(h_dim * c_dim);
+
+    // Per-tensor gradient scales (PTQ) fold through AᵀB; per-sample
+    // scales (PSQ) cannot — they live on the contraction axis.
+    let per_tensor = !ws.g_scales.per_row;
+    if per_tensor {
+        // dW2 = Hᵀ·G — all-integer.
+        kernels::gemm_i8_at_b(
+            dw2,
+            Init::Zero,
+            &ws.h_codes.data,
+            &ws.h_scales.inv,
+            &ws.h_scales.zero,
+            &ws.g_codes.data,
+            &ws.g_scales.inv,
+            &ws.g_scales.zero,
+            bsz,
+            h_dim,
+            c_dim,
+            &mut ws.int_gemm,
+        );
+        kernels::col_sums_i8(db2, &ws.g_codes.data, c_dim, ws.g_scales.inv[0], ws.g_scales.zero[0]);
+    } else {
+        kernels::gemm_at_b(dw2, Init::Zero, &ws.h, &ws.gq.data, bsz, h_dim, c_dim);
+        kernels::col_sums(db2, &ws.gq.data, c_dim);
+    }
+
+    // g_a = G·W2ᵀ — integer for both PTQ and PSQ: the gradient scales
+    // sit on the M (sample) axis and the operand scale is per-tensor,
+    // so both fold into the epilogue.
+    kernels::gemm_i8(
+        &mut ws.g_h.data,
+        Init::Zero,
+        &ws.g_codes.data,
+        &ws.g_scales.inv,
+        &ws.g_scales.zero,
+        &ws.w2_codes.data,
+        &ws.w2_scales.inv,
+        &ws.w2_scales.zero,
+        bsz,
+        h_dim,
+        c_dim,
+        &mut ws.int_gemm,
+    );
+
+    // relu mask at the tap, then the hidden-gradient signal to codes.
+    kernels::relu_mask(&mut ws.g_h.data, &ws.h_pre);
+    let ok = q.quantize_codes(&ws.g_h, bits, rng, &mut ws.gh_codes, &mut ws.gh_scales, &mut ws.g_hq);
+    debug_assert!(ok, "backward_for gates on supports_codes");
+
+    if per_tensor {
+        ptq::quantize_det_codes_into(x, bsz, d_dim, OPERAND_NBINS, &mut ws.x_codes, &mut ws.x_scales);
+        // dW1 = Xᵀ·g_h — all-integer.
+        kernels::gemm_i8_at_b(
+            dw1,
+            Init::Zero,
+            &ws.x_codes.data,
+            &ws.x_scales.inv,
+            &ws.x_scales.zero,
+            &ws.gh_codes.data,
+            &ws.gh_scales.inv,
+            &ws.gh_scales.zero,
+            bsz,
+            d_dim,
+            h_dim,
+            &mut ws.int_gemm,
+        );
+        kernels::col_sums_i8(db1, &ws.gh_codes.data, h_dim, ws.gh_scales.inv[0], ws.gh_scales.zero[0]);
+    } else {
+        kernels::gemm_at_b(dw1, Init::Zero, x, &ws.g_hq.data, bsz, d_dim, h_dim);
+        kernels::col_sums(db1, &ws.g_hq.data, h_dim);
+    }
+}
+
+/// Route one backward pass by compute mode. Int8 requires an FQT
+/// variant whose quantizer has an integer entry point at this bitwidth;
+/// everything else (exact/qat, BHQ/FP8/BFP, fractional or >8 bits)
+/// takes the simulate path — quantized variants with a counted
+/// `quant_int_fallback_total` increment.
+#[allow(clippy::too_many_arguments)]
+fn backward_for(
+    compute: ComputeMode,
+    dims: &MlpDims,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    quant: Option<(GradQuantizer, f32)>,
+    rng: &mut Pcg32,
+    ws: &mut Workspace,
+) {
+    match (compute, quant) {
+        (ComputeMode::Int8, Some((q, bits))) if q.supports_codes(bits) => {
+            backward_blocked_int8(dims, params, x, y, q, bits, rng, ws);
+        }
+        (ComputeMode::Int8, Some((q, _))) => {
+            crate::obs::quant::int_fallback(q.name());
+            backward_blocked(dims, params, x, y, quant, rng, ws);
+        }
+        _ => backward_blocked(dims, params, x, y, quant, rng, ws),
+    }
+}
+
 /// (params, momentum, x, y, seed, lr, bits) -> (params', momentum', loss, acc)
-fn train_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+fn train_step(
+    meta: &ArtifactMeta,
+    dims: &MlpDims,
+    inputs: &[HostTensor],
+    compute: ComputeMode,
+) -> Result<StepOutputs> {
     let params = inputs[0].as_f32()?;
     let velocity = inputs[1].as_f32()?;
     let x = inputs[2].as_f32()?;
@@ -439,7 +637,7 @@ fn train_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Res
         let mut rng = seed_rng(seed);
         {
             let _sp = crate::obs::span("native/backward");
-            backward_blocked(dims, params, x, y, quant, &mut rng, ws);
+            backward_for(compute, dims, params, x, y, quant, &mut rng, ws);
         }
         if let Some(m) = &ws.metrics {
             m.flops.add(forward_flops(dims) + backward_flops(dims));
@@ -466,7 +664,12 @@ fn train_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Res
 }
 
 /// (params, x, y, seed, bits) -> (loss, flat_grad)
-fn probe_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Result<StepOutputs> {
+fn probe_step(
+    meta: &ArtifactMeta,
+    dims: &MlpDims,
+    inputs: &[HostTensor],
+    compute: ComputeMode,
+) -> Result<StepOutputs> {
     let params = inputs[0].as_f32()?;
     let x = inputs[1].as_f32()?;
     let y = labels(&inputs[2], dims.batch)?;
@@ -485,7 +688,7 @@ fn probe_step(meta: &ArtifactMeta, dims: &MlpDims, inputs: &[HostTensor]) -> Res
         let mut rng = seed_rng(seed);
         {
             let _sp = crate::obs::span("native/backward");
-            backward_blocked(dims, params, x, y, quant, &mut rng, ws);
+            backward_for(compute, dims, params, x, y, quant, &mut rng, ws);
         }
         if let Some(m) = &ws.metrics {
             m.flops.add(forward_flops(dims) + backward_flops(dims));
@@ -552,21 +755,68 @@ pub enum KernelPath {
     Reference,
 }
 
+/// Arithmetic mode for the backward GEMMs (the forward pass is always
+/// f32 — the paper quantizes the gradient signal, not inference).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Quantize–dequantize simulation: the kernels multiply f32 values
+    /// that happen to lie on the quantization grid (the default, and
+    /// the mode every result before this knob was measured in).
+    #[default]
+    Simulate,
+    /// True integer path: eligible backward GEMMs consume centered i8
+    /// codes with i32 accumulation (`kernels::gemm_i8*`) and fold the
+    /// affine scales into the f32 epilogue. Quantizers or bitwidths
+    /// without an integer entry point fall back to `Simulate`, counted
+    /// in `quant_int_fallback_total`.
+    Int8,
+}
+
+impl ComputeMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeMode::Simulate => "simulate",
+            ComputeMode::Int8 => "int8",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "simulate" => Some(ComputeMode::Simulate),
+            "int8" => Some(ComputeMode::Int8),
+            _ => None,
+        }
+    }
+}
+
 /// Stateless interpreter for the `mlp` artifacts. One instance per
 /// [`Executor`](super::Executor); dispatch is on the artifact metadata.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeExecutor {
     path: KernelPath,
+    compute: ComputeMode,
 }
 
 impl NativeExecutor {
     pub fn new(path: KernelPath) -> Self {
-        Self { path }
+        Self {
+            path,
+            compute: ComputeMode::default(),
+        }
     }
 
     /// The golden-reference (pre-kernel-layer) interpreter.
     pub fn reference() -> Self {
         Self::new(KernelPath::Reference)
+    }
+
+    /// Select the backward arithmetic mode. Only the blocked path has
+    /// integer kernels; the reference interpreter ignores this and
+    /// always simulates.
+    #[must_use]
+    pub fn with_compute(mut self, compute: ComputeMode) -> Self {
+        self.compute = compute;
+        self
     }
 }
 
@@ -582,8 +832,8 @@ impl ExecutorBackend for NativeExecutor {
         let dims = MlpDims::infer(meta)?;
         match self.path {
             KernelPath::Blocked => match meta.step {
-                StepKind::Train => train_step(meta, &dims, inputs),
-                StepKind::Probe => probe_step(meta, &dims, inputs),
+                StepKind::Train => train_step(meta, &dims, inputs, self.compute),
+                StepKind::Probe => probe_step(meta, &dims, inputs, self.compute),
                 StepKind::Eval => eval_step(&dims, inputs),
                 StepKind::ActGrad => actgrad_step(&dims, inputs),
             },
@@ -1200,6 +1450,126 @@ mod tests {
         let b = NativeExecutor::reference().execute(&meta, &inputs).unwrap();
         for (ta, tb) in a.iter().zip(&b) {
             assert_eq!(ta.as_f32().unwrap(), tb.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn compute_mode_names_round_trip() {
+        for m in [ComputeMode::Simulate, ComputeMode::Int8] {
+            assert_eq!(ComputeMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(ComputeMode::from_name("fp64"), None);
+        assert_eq!(ComputeMode::default(), ComputeMode::Simulate);
+    }
+
+    /// The int8 probe is bitwise reproducible across runs, its forward
+    /// loss is bitwise equal to simulate (the forward pass is f32 in
+    /// both modes), and its gradient tracks the simulate gradient — the
+    /// two modes are different unbiased estimators of the same exact
+    /// gradient (int8 additionally quantizes the GEMM operands), so the
+    /// comparison is directional, not bitwise.
+    #[test]
+    fn int8_probe_reproducible_and_tracks_simulate() {
+        let spec = tiny_spec();
+        let meta = tiny_meta("ptq", StepKind::Probe);
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 17);
+        let run = |exec: NativeExecutor| {
+            let inputs = [
+                HostTensor::F32(params.clone()),
+                HostTensor::F32(x.clone()),
+                HostTensor::I32(y.clone()),
+                HostTensor::F32(vec![5.0]),
+                HostTensor::F32(vec![4.0]),
+            ];
+            let mut out = exec.execute(&meta, &inputs).unwrap();
+            let grad = out.pop().unwrap().into_f32().unwrap();
+            let loss = out.pop().unwrap().into_f32().unwrap()[0];
+            (loss, grad)
+        };
+        let int8 = NativeExecutor::default().with_compute(ComputeMode::Int8);
+        let (loss_a, grad_a) = run(int8);
+        let (loss_b, grad_b) = run(int8);
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+        assert_eq!(grad_a, grad_b, "int8 path must be run-to-run bitwise");
+
+        let (loss_s, grad_s) = run(NativeExecutor::default());
+        assert_eq!(loss_a.to_bits(), loss_s.to_bits(), "forward is f32 in both modes");
+        let dot: f64 = grad_a
+            .iter()
+            .zip(&grad_s)
+            .map(|(&a, &b)| f64::from(a) * f64::from(b))
+            .sum();
+        let na = grad_a.iter().map(|&a| f64::from(a).powi(2)).sum::<f64>().sqrt();
+        let ns = grad_s.iter().map(|&b| f64::from(b).powi(2)).sum::<f64>().sqrt();
+        let cos = dot / (na * ns).max(1e-30);
+        assert!(cos > 0.95, "cos(int8, simulate) = {cos}");
+    }
+
+    /// After the first int8 step at a geometry, the integer lanes stop
+    /// growing: every later step reuses the arena capacity (the ISSUE 10
+    /// allocation-free acceptance bullet, asserted on the arena itself
+    /// rather than the racy global grow counter).
+    #[test]
+    fn int8_backward_is_allocation_free_after_warmup() {
+        let spec = tiny_spec();
+        let meta = tiny_meta("ptq", StepKind::Train);
+        let dims = MlpDims::infer(&meta).unwrap();
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 29);
+        let mut ws = Workspace::default();
+        let step = |ws: &mut Workspace, seed: u64| {
+            ws.prepare(&dims);
+            forward_blocked(&dims, &params, &x, &y, ws).unwrap();
+            let mut rng = Pcg32::new(seed, 1);
+            backward_blocked_int8(&dims, &params, &x, &y, GradQuantizer::Ptq, 4.0, &mut rng, ws);
+        };
+        step(&mut ws, 1);
+        let warm = ws.int_bytes();
+        assert!(warm > 0, "int lanes must be in use");
+        let high_water = {
+            ws.prepare(&dims); // fold the int lanes into the high-water mark
+            ws.high_water
+        };
+        for s in 2..8 {
+            step(&mut ws, s);
+            assert_eq!(ws.int_bytes(), warm, "int lanes grew after warm-up");
+        }
+        ws.prepare(&dims);
+        assert_eq!(ws.high_water, high_water, "arena grew after warm-up");
+    }
+
+    /// Quantizers/bitwidths without an integer entry point fall back to
+    /// the simulate path bitwise: `--compute int8` never changes BHQ or
+    /// fractional-bit numerics, it only counts the fallback.
+    #[test]
+    fn int8_falls_back_bitwise_for_unsupported_quantizers() {
+        let spec = tiny_spec();
+        let params = init_params(&spec);
+        let (x, y) = tiny_batch(&spec, 41);
+        for (variant, bits) in [("bhq", 4.0f32), ("ptq", 1.5), ("exact", 4.0)] {
+            let meta = tiny_meta(variant, StepKind::Train);
+            let inputs = [
+                HostTensor::F32(params.clone()),
+                HostTensor::F32(vec![0.0; params.len()]),
+                HostTensor::F32(x.clone()),
+                HostTensor::I32(y.clone()),
+                HostTensor::F32(vec![7.0]),
+                HostTensor::F32(vec![0.1]),
+                HostTensor::F32(vec![bits]),
+            ];
+            let sim = NativeExecutor::default().execute(&meta, &inputs).unwrap();
+            let int8 = NativeExecutor::default()
+                .with_compute(ComputeMode::Int8)
+                .execute(&meta, &inputs)
+                .unwrap();
+            for (ta, tb) in sim.iter().zip(&int8) {
+                assert_eq!(
+                    ta.as_f32().unwrap(),
+                    tb.as_f32().unwrap(),
+                    "{variant}@{bits}: fallback must be bitwise simulate"
+                );
+            }
         }
     }
 

@@ -1,6 +1,6 @@
 //! Golden-parity harness for the blocked kernel layer (DESIGN.md §5).
 //!
-//! Three layers of checks, bottom-up:
+//! Four layers of checks, bottom-up:
 //!
 //! 1. Blocked GEMM / GEMM-transpose match the retained naive reference
 //!    within 1e-5 relative over random M/N/K — including K = 0, M = 1,
@@ -11,7 +11,12 @@
 //!    bitwise identical to the allocating `apply`, draws the same RNG
 //!    stream, honors the NaN poison contract, and reuses its scratch
 //!    safely across changing shapes.
-//! 3. The blocked native executor reproduces the per-sample reference
+//! 3. The integer kernels (`gemm_i8`, `gemm_i8_at_b`, DESIGN.md §5.1)
+//!    match their naive integer references bitwise over random shapes
+//!    and scale arities, match the dequantize-then-f32-GEMM path bitwise
+//!    under power-of-two scales, and track an f64 reference within a
+//!    stated ULP band for arbitrary scales.
+//! 4. The blocked native executor reproduces the per-sample reference
 //!    executor bitwise for every artifact variant and step kind, on the
 //!    default geometry and on a deliberately tile-unfriendly one. The
 //!    unquantized variants run at bits = 0, pinning the "bits=0 train
@@ -207,7 +212,154 @@ fn fused_scratch_is_safe_across_shape_changes() {
 }
 
 // ---------------------------------------------------------------------------
-// 3. Blocked executor vs per-sample reference executor
+// 3. Integer-code kernels (ISSUE 10): blocked vs naive, and vs dequant-f32
+// ---------------------------------------------------------------------------
+
+fn rand_codes(g: &mut Gen, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (g.usize(0..=255) as i32 - 128) as i8).collect()
+}
+
+/// Blocked `gemm_i8` must match the naive integer reference *bitwise*
+/// over random shapes (K = 0, M = 1, K straddling the tile) and both
+/// scale arities: i32 accumulation is associative, and the epilogue
+/// fold is literally shared code.
+#[test]
+fn prop_blocked_gemm_i8_matches_naive_bitwise() {
+    check(80, |g| {
+        let (m, n, k) = (small_dim(g), small_dim(g), k_dim(g));
+        let a = rand_codes(g, m * k);
+        let bt = rand_codes(g, n * k);
+        let scale = |g: &mut Gen, len: usize| -> (Vec<f32>, Vec<f32>) {
+            let inv: Vec<f32> = (0..len).map(|_| g.f32(0.001..0.1)).collect();
+            let zero: Vec<f32> = (0..len).map(|_| g.f32(-1.0..1.0)).collect();
+            (inv, zero)
+        };
+        let (inv_a, zero_a) = scale(g, if g.bool(0.5) { 1 } else { m.max(1) });
+        let (inv_b, zero_b) = scale(g, if g.bool(0.5) { 1 } else { n.max(1) });
+        let bias = g.vec_normal(n, 0.5);
+        let init = if g.bool(0.5) { Init::Bias(&bias) } else { Init::Zero };
+        let mut ws = kernels::IntGemmScratch::default();
+        let mut c_blk = vec![f32::NAN; m * n];
+        let mut c_ref = vec![f32::NAN; m * n];
+        kernels::gemm_i8(
+            &mut c_blk, init, &a, &inv_a, &zero_a, &bt, &inv_b, &zero_b, m, n, k, &mut ws,
+        );
+        kernels::naive::gemm_i8(
+            &mut c_ref, init, &a, &inv_a, &zero_a, &bt, &inv_b, &zero_b, m, n, k,
+        );
+        compare_kernel(&c_blk, &c_ref, &format!("gemm_i8 {m}x{n}x{k}"))
+    });
+}
+
+#[test]
+fn prop_blocked_gemm_i8_at_b_matches_naive_bitwise() {
+    check(80, |g| {
+        let m = match g.usize(0..=2) {
+            0 => small_dim(g),
+            1 => g.usize(10..=30),
+            _ => g.usize(kernels::KC - 2..=kernels::KC + 5),
+        };
+        let (k, n) = (small_dim(g), small_dim(g));
+        let a = rand_codes(g, m * k);
+        let b = rand_codes(g, m * n);
+        let (inv_a, zero_a) = (vec![g.f32(0.001..0.1)], vec![g.f32(-1.0..1.0)]);
+        let (inv_b, zero_b) = (vec![g.f32(0.001..0.1)], vec![g.f32(-1.0..1.0)]);
+        let mut ws = kernels::IntGemmScratch::default();
+        let mut c_blk = vec![f32::NAN; k * n];
+        let mut c_ref = vec![f32::NAN; k * n];
+        kernels::gemm_i8_at_b(
+            &mut c_blk, Init::Zero, &a, &inv_a, &zero_a, &b, &inv_b, &zero_b, m, k, n, &mut ws,
+        );
+        kernels::naive::gemm_i8_at_b(
+            &mut c_ref, Init::Zero, &a, &inv_a, &zero_a, &b, &inv_b, &zero_b, m, k, n,
+        );
+        compare_kernel(&c_blk, &c_ref, &format!("gemm_i8_at_b {m}x{k}x{n}"))
+    });
+}
+
+/// With power-of-two scales, small K, and full-range codes, every value
+/// in both the integer epilogue and the dequantize-then-f32-GEMM path
+/// is exactly representable — so the int path must equal the f32 path
+/// *bitwise*. This pins the epilogue algebra to the simulate semantics.
+#[test]
+fn gemm_i8_po2_scales_match_dequant_f32_gemm_bitwise() {
+    let (m, n, k) = (5usize, 6usize, 12usize);
+    let mut rng = Pcg32::new(0x1D8, 7);
+    let code = |rng: &mut Pcg32| (rng.below(256) as i32 - 128) as i8;
+    let a: Vec<i8> = (0..m * k).map(|_| code(&mut rng)).collect();
+    let bt: Vec<i8> = (0..n * k).map(|_| code(&mut rng)).collect();
+    // per-row po2 scales on A (the PSQ axis), per-tensor po2 on B
+    let inv_a: Vec<f32> = (0..m).map(|i| if i % 2 == 0 { 0.0078125 } else { 0.03125 }).collect();
+    let zero_a: Vec<f32> = (0..m).map(|i| if i % 2 == 0 { 1.0 } else { -0.25 }).collect();
+    let (inv_b, zero_b) = (vec![0.015625f32], vec![0.5f32]);
+
+    let mut c_int = vec![f32::NAN; m * n];
+    let mut ws = kernels::IntGemmScratch::default();
+    kernels::gemm_i8(
+        &mut c_int, Init::Zero, &a, &inv_a, &zero_a, &bt, &inv_b, &zero_b, m, n, k, &mut ws,
+    );
+
+    // dequantize and run the f32 kernel (B laid out k x n for `gemm`)
+    let af: Vec<f32> = (0..m * k)
+        .map(|idx| f32::from(a[idx]) * inv_a[idx / k] + zero_a[idx / k])
+        .collect();
+    let mut bf = vec![0.0f32; k * n];
+    for j in 0..n {
+        for kk in 0..k {
+            bf[kk * n + j] = f32::from(bt[j * k + kk]) * inv_b[0] + zero_b[0];
+        }
+    }
+    let mut c_f32 = vec![f32::NAN; m * n];
+    kernels::gemm(&mut c_f32, Init::Zero, &af, &bf, m, k, n);
+    for (i, (x, y)) in c_int.iter().zip(&c_f32).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "elem {i}: int {x} vs f32 {y}");
+    }
+}
+
+/// With arbitrary scales the two formulations differ only by rounding:
+/// the int path's error against an f64 reference is bounded by a few
+/// ULPs of the term magnitudes (stated band: 32 eps of the absolute
+/// dequantized dot plus folded terms).
+#[test]
+fn prop_gemm_i8_tracks_f64_reference_within_ulp_band() {
+    check(60, |g| {
+        let (m, n) = (g.usize(1..=6), g.usize(1..=6));
+        let k = g.usize(1..=40);
+        let a = rand_codes(g, m * k);
+        let bt = rand_codes(g, n * k);
+        let inv_a = vec![g.f32(0.0001..0.2)];
+        let zero_a = vec![g.f32(-2.0..2.0)];
+        let inv_b = vec![g.f32(0.0001..0.2)];
+        let zero_b = vec![g.f32(-2.0..2.0)];
+        let mut c_int = vec![f32::NAN; m * n];
+        let mut ws = kernels::IntGemmScratch::default();
+        kernels::gemm_i8(
+            &mut c_int, Init::Zero, &a, &inv_a, &zero_a, &bt, &inv_b, &zero_b, m, n, k, &mut ws,
+        );
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0.0f64;
+                let mut mag = 0.0f64;
+                for kk in 0..k {
+                    let av = f64::from(a[i * k + kk]) * f64::from(inv_a[0]) + f64::from(zero_a[0]);
+                    let bv = f64::from(bt[j * k + kk]) * f64::from(inv_b[0]) + f64::from(zero_b[0]);
+                    want += av * bv;
+                    mag += (av * bv).abs();
+                }
+                let got = f64::from(c_int[i * n + j]);
+                let tol = 32.0 * f64::from(f32::EPSILON) * (mag + 1.0);
+                prop_assert(
+                    (got - want).abs() <= tol,
+                    format!("({i},{j}) k={k}: int {got} vs f64 {want}, tol {tol}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 4. Blocked executor vs per-sample reference executor
 // ---------------------------------------------------------------------------
 
 fn exec_inputs(
